@@ -1,0 +1,28 @@
+"""Shared benchmark utilities: timed jit calls, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+
+ROWS: List[str] = []
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (us) of a jitted call, post-warmup."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row)

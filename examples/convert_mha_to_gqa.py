@@ -1,0 +1,44 @@
+"""Opt-GQA dynamic grouping demo (paper §II.B): convert an MHA checkpoint
+(qwen1.5-0.5b-style, kv == heads) to grouped-query attention by
+activation-similarity clustering, and measure the quality of the grouping.
+
+    PYTHONPATH=src python examples/convert_mha_to_gqa.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_reduced
+from repro.core.grouping import convert_mha_to_gqa, grouping_quality, head_similarity
+from repro.models import transformer as T
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    cfg = get_reduced("qwen1.5-0.5b", num_layers=2, num_kv_heads=4,
+                      num_heads=8)
+    # an "MHA checkpoint": kv == heads
+    mha_cfg = cfg.replace(num_kv_heads=cfg.num_heads)
+    params = T.init_params(mha_cfg, key)
+
+    # calibration: collect key activations per head from layer 0
+    lp = jax.tree.map(lambda a: a[0], params["layers"])
+    toks = jax.random.randint(key, (4, 64), 0, cfg.vocab_size)
+    x = params["embed"][toks].astype(jnp.float32)
+    H, Dh = mha_cfg.num_heads, mha_cfg.resolved_head_dim
+    k_acts = jnp.einsum("bsd,dhk->hbsk", x, lp["attn"]["wk"]).reshape(H, -1, Dh)
+
+    conv = convert_mha_to_gqa(lp["attn"]["wq"], lp["attn"]["wk"],
+                              lp["attn"]["wv"], k_acts,
+                              num_kv_heads=cfg.num_kv_heads)
+    print(f"groups (by activation similarity): {conv.groups}")
+    print(f"intra-group sim {conv.intra_sim:.3f} vs inter-group "
+          f"{conv.inter_sim:.3f}")
+    print(f"merged K/V shapes: {conv.wk.shape} {conv.wv.shape} "
+          f"(was {lp['attn']['wk'].shape})")
+    print(f"KV cache memory after conversion: "
+          f"{cfg.num_kv_heads / mha_cfg.num_heads:.0%} of MHA")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Offline GPTQ quantization walkthrough (the 'GPTQ' in Opt-GPTQ).
+
+Quantizes one linear layer with the full OBQ loop and compares against
+round-to-nearest under the calibration Hessian, then quantizes a whole
+reduced model and reports logit drift.
+
+    PYTHONPATH=src python examples/quantize_model.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import QuantConfig
+from repro.configs.registry import get_reduced
+from repro.core.gptq import gptq_quantize, quant_error, rtn_quantize
+from repro.models import transformer as T
+from repro.models.quantize import gptq_quantize_model, quantize_params_rtn
+
+
+def main():
+    rng = np.random.default_rng(0)
+    print("== single layer: GPTQ vs RTN under the calibration Hessian ==")
+    din, dout, n = 256, 128, 4096
+    x = rng.normal(size=(n, din)) * (1 + 4 * rng.random(din))
+    w = rng.normal(size=(din, dout))
+    h = 2 * x.T @ x / n
+    for bits in (4, 3):
+        cfg = QuantConfig(bits=bits, group_size=64)
+        eg = quant_error(w, gptq_quantize(w, h, cfg), h)
+        er = quant_error(w, rtn_quantize(w, cfg), h)
+        print(f"  int{bits}: gptq={eg:.5f}  rtn={er:.5f}  "
+              f"(GPTQ {100*(er-eg)/er:.1f}% better)")
+
+    print("\n== whole model: logit drift after int4 quantization ==")
+    key = jax.random.PRNGKey(0)
+    cfg = get_reduced("qwen2-1.5b", num_layers=2)
+    params = T.init_params(cfg, key)
+    calib = [{"tokens": jax.random.randint(jax.random.fold_in(key, i),
+                                           (2, 32), 0, cfg.vocab_size)}
+             for i in range(4)]
+    qg = gptq_quantize_model(cfg, params, calib, QuantConfig(group_size=32))
+    qr = quantize_params_rtn(params, cfg, group_size=32)
+    test = calib[0]
+    lf = np.asarray(T.forward(cfg, params, test), np.float64)
+    for name, q in (("gptq", qg), ("rtn", qr)):
+        lq = np.asarray(T.forward(cfg, q, test), np.float64)
+        drift = np.abs(lq - lf).mean()
+        agree = (lq.argmax(-1) == lf.argmax(-1)).mean()
+        print(f"  {name}: mean|Δlogit|={drift:.4f}  top1-agree={agree:.3f}")
+    print("\nweight bytes: int4+scales ≈ 0.28x of fp16 "
+          "(4.0b codes + per-group scale/zero)")
+
+
+if __name__ == "__main__":
+    main()

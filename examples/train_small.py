@@ -1,0 +1,29 @@
+"""Train a ~100M-param model for a few hundred steps on CPU with the full
+production stack (scan layers, remat, AdamW, checkpointing, fault
+supervision). This is the end-to-end training driver of deliverable (b):
+
+    PYTHONPATH=src python examples/train_small.py [--steps 300]
+
+Equivalent CLI form (also supports --resume and failure injection):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --reduced \
+        --d-model 256 --steps 300 --batch 8 --seq 128
+"""
+import argparse
+import sys
+
+from repro.launch import train as train_cli
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    sys.argv = ["train", "--arch", "qwen2-1.5b", "--reduced",
+                "--d-model", "384", "--layers", "6",
+                "--steps", str(args.steps), "--batch", "8", "--seq", "128",
+                "--ckpt-dir", "/tmp/repro_train_small"]
+    train_cli.main()
+
+
+if __name__ == "__main__":
+    main()

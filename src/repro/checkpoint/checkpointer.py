@@ -1,0 +1,161 @@
+"""Atomic, resumable, topology-independent checkpoints.
+
+* Leaves are saved as .npy under ``step_<N>.tmp/`` then renamed —
+  a crash mid-write never corrupts the latest checkpoint.
+* Shardings are NOT stored: on restore, arrays are ``device_put`` with
+  shardings derived from the *current* mesh's logical rules, so a job can
+  restart on a different device count (elastic re-mesh, DESIGN.md §4).
+* ``AsyncCheckpointer`` overlaps serialization with the next train steps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.-]")
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, Any]:
+    if isinstance(tree, dict):
+        out = {}
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}.{k}" if prefix else str(k)))
+        return out
+    if isinstance(tree, (tuple, list)) or hasattr(tree, "_fields"):
+        items = tree._asdict().items() if hasattr(tree, "_asdict") else \
+            enumerate(tree)
+        out = {}
+        for k, v in items:
+            out.update(_flatten(v, f"{prefix}.{k}" if prefix else str(k)))
+        return out
+    return {prefix: tree}
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, trees: Dict[str, Any],
+             extra: Optional[Dict[str, Any]] = None) -> str:
+        tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "trees": {}, "extra": extra or {}}
+        for tname, tree in trees.items():
+            flat = _flatten(tree)
+            manifest["trees"][tname] = sorted(flat)
+            for path, leaf in flat.items():
+                arr = np.asarray(jax.device_get(leaf))
+                fn = _SAFE.sub("_", f"{tname}.{path}") + ".npy"
+                np.save(os.path.join(tmp, fn), arr)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for n in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", n)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        st = self.all_steps()
+        return st[-1] if st else None
+
+    def restore(self, step: int, templates: Dict[str, Any],
+                shardings: Optional[Dict[str, Any]] = None
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """templates: pytrees with the target structure (leaves may be
+        ShapeDtypeStructs). shardings: same-structure NamedSharding trees."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        out = {}
+        for tname, tree in templates.items():
+            flat_t = _flatten(tree)
+            flat_s = _flatten(shardings[tname]) if shardings and \
+                tname in shardings else {}
+            loaded = {}
+            for path in flat_t:
+                fn = _SAFE.sub("_", f"{tname}.{path}") + ".npy"
+                arr = np.load(os.path.join(d, fn))
+                sh = flat_s.get(path)
+                loaded[path] = (jax.device_put(arr, sh) if sh is not None
+                                else jnp.asarray(arr))
+            out[tname] = _unflatten_like(tree, loaded)
+        return out, manifest["extra"]
+
+
+def _unflatten_like(tree: Any, flat: Dict[str, Any], prefix: str = ""):
+    if isinstance(tree, dict):
+        return {k: _unflatten_like(v, flat, f"{prefix}.{k}" if prefix else str(k))
+                for k, v in tree.items()}
+    if hasattr(tree, "_fields"):                           # NamedTuple
+        vals = {k: _unflatten_like(v, flat, f"{prefix}.{k}" if prefix else str(k))
+                for k, v in tree._asdict().items()}
+        return type(tree)(**vals)
+    if isinstance(tree, (tuple, list)):
+        vals = [_unflatten_like(v, flat, f"{prefix}.{i}" if prefix else str(i))
+                for i, v in enumerate(tree)]
+        return type(tree)(vals)
+    return flat[prefix]
+
+
+class AsyncCheckpointer(Checkpointer):
+    """Overlaps device_get+serialize with subsequent steps (one in flight)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        super().__init__(directory, keep)
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def save_async(self, step: int, trees: Dict[str, Any],
+                   extra: Optional[Dict[str, Any]] = None) -> None:
+        self.wait()
+        # snapshot to host NOW (cheap, ordered) — serialization runs async
+        host_trees = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  trees)
+
+        def work():
+            try:
+                self.save(step, host_trees, extra)
+            except BaseException as e:      # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err

@@ -1,0 +1,1 @@
+"""Configs for the assigned architectures."""

@@ -1,0 +1,10 @@
+"""Command-R+ 104B [hf:CohereForAI/c4ai-command-r-v01 family] — dense, GQA kv=8, no bias."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b", family="dense",
+    num_layers=64, d_model=12288, num_heads=96, num_kv_heads=8,
+    head_dim=128, d_ff=33792, vocab_size=256000,
+    qkv_bias=False, pos_emb="rope", rope_theta=75e6, act="silu",
+    norm="layernorm", tie_embeddings=True,
+)

@@ -1,0 +1,14 @@
+"""Falcon-Mamba-7B [arXiv:2410.05355] — attention-free mamba-1.
+
+Opt-GQA inapplicable (no attention); the paged-pool insight survives as a
+slot-indexed O(1) SSM state cache. GPTQ applies to all projections.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", family="ssm",
+    num_layers=64, d_model=4096, num_heads=1, num_kv_heads=1,
+    d_ff=0, vocab_size=65024, head_dim=64,
+    pos_emb="none", ssm_state=16, ssm_conv=4, ssm_expand=2,
+    tie_embeddings=True,
+)

@@ -1,0 +1,10 @@
+"""Kimi-K2 1T-A32B [arXiv:2501.kimi2, paper-table] — MoE 384 routed top-8, GQA kv=8."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    num_layers=61, d_model=7168, num_heads=64, num_kv_heads=8,
+    head_dim=112, d_ff=2048, vocab_size=163840,
+    qkv_bias=False, pos_emb="rope", act="silu",
+    num_experts=384, num_shared_experts=1, moe_top_k=8, moe_d_ff=2048,
+)

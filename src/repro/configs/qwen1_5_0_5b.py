@@ -1,0 +1,13 @@
+"""Qwen1.5-0.5B [hf:Qwen/Qwen1.5-0.5B] — dense, MHA (kv=16), QKV bias.
+
+kv_heads == num_heads: this is the arch on which the Opt-GQA *conversion*
+(activation-similarity dynamic grouping, core/grouping.py) is demonstrated.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-0.5b", family="dense",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=16,
+    head_dim=64, d_ff=2816, vocab_size=151936,
+    qkv_bias=True, pos_emb="rope", act="silu", tie_embeddings=True,
+)

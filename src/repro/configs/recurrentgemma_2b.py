@@ -1,0 +1,10 @@
+"""RecurrentGemma-2B [arXiv:2402.19427; hf] — RG-LRU + local attention, 1:2 pattern, MQA kv=1."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    num_layers=26, d_model=2560, num_heads=10, num_kv_heads=1,
+    head_dim=256, d_ff=7680, vocab_size=256000,
+    attn_pattern=("recurrent", "recurrent", "sliding"), sliding_window=2048,
+    pos_emb="rope", act="gelu", lru_width=2560, tie_embeddings=True,
+)

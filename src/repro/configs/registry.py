@@ -1,0 +1,50 @@
+"""Architecture registry: ``--arch <id>`` resolution + per-arch shape cells."""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.configs.base import (ALL_SHAPES, DECODE_32K, LONG_500K, ModelConfig,
+                                PREFILL_32K, TRAIN_4K, ShapeConfig, reduced)
+from repro.configs import (qwen2_1_5b, qwen1_5_0_5b, h2o_danube_3_4b,
+                           command_r_plus_104b, qwen2_moe_a2_7b,
+                           kimi_k2_1t_a32b, falcon_mamba_7b,
+                           recurrentgemma_2b, hubert_xlarge,
+                           llava_next_mistral_7b)
+
+_MODULES = (qwen2_1_5b, qwen1_5_0_5b, h2o_danube_3_4b, command_r_plus_104b,
+            qwen2_moe_a2_7b, kimi_k2_1t_a32b, falcon_mamba_7b,
+            recurrentgemma_2b, hubert_xlarge, llava_next_mistral_7b)
+
+ARCHS: Dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_reduced(name: str, **overrides) -> ModelConfig:
+    return reduced(get_config(name), **overrides)
+
+
+def shapes_for(cfg: ModelConfig) -> List[Tuple[ShapeConfig, str]]:
+    """All 4 shape cells with admissibility: (shape, "run"|"skip: reason")."""
+    out = []
+    for s in ALL_SHAPES:
+        if s.kind == "decode" and cfg.is_encoder:
+            out.append((s, "skip: encoder-only arch has no decode step"))
+        elif s is LONG_500K and not cfg.is_subquadratic:
+            out.append((s, "skip: full-attention arch, 512k decode is quadratic"))
+        else:
+            out.append((s, "run"))
+    return out
+
+
+def all_cells() -> List[Tuple[str, str, str]]:
+    """(arch, shape, status) for all 40 cells."""
+    cells = []
+    for name, cfg in ARCHS.items():
+        for s, status in shapes_for(cfg):
+            cells.append((name, s.name, status))
+    return cells

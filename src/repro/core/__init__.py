@@ -1,0 +1,12 @@
+"""Opt-GPTQ core: Opt-GQA attention, paged KV cache, GPTQ quantization,
+ALiBi, and dynamic head grouping — the paper's contribution as composable
+JAX modules."""
+from repro.core.alibi import alibi_bias, alibi_slopes
+from repro.core.gqa import decode_attention, grouped_attention, mha_attention
+from repro.core.grouping import convert_mha_to_gqa, cluster_heads, head_similarity
+from repro.core.gptq import HessianAccumulator, gptq_quantize, rtn_quantize, quant_error
+from repro.core.paged_cache import (BlockAllocator, OutOfBlocksError,
+                                    gather_kv, make_kv_pool, make_state_pool,
+                                    write_decode_kv, write_prefill_kv)
+from repro.core.quant import (dequantize, make_quant_params, pack_int4,
+                              quant_matmul_ref, unpack_int4)

@@ -1,0 +1,47 @@
+"""ALiBi (Attention with Linear Biases) — paper §III.A.
+
+The paper's point: the bias is *added to the score tile*, never materialized
+as a [S, S] mask matrix. Helpers here produce slopes and per-tile biases from
+iota, so kernels and the XLA reference path both avoid the dense mask.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def alibi_slopes(num_heads: int) -> jnp.ndarray:
+    """Standard ALiBi slope schedule: geometric in 2^(-8/n).
+
+    Handles non-power-of-two head counts the way the ALiBi paper does
+    (interleave the next power of two's odd slopes).
+    """
+    def pow2_slopes(n):
+        start = 2.0 ** (-(2.0 ** -(math.log2(n) - 3)))
+        return [start * (start ** i) for i in range(n)]
+
+    if math.log2(num_heads).is_integer():
+        s = pow2_slopes(num_heads)
+    else:
+        n = 2 ** math.floor(math.log2(num_heads))
+        s = pow2_slopes(n)
+        extra = pow2_slopes(2 * n)[0::2][: num_heads - n]
+        s = s + extra
+    return jnp.asarray(s, dtype=jnp.float32)
+
+
+def alibi_bias(slopes: jnp.ndarray, q_pos: jnp.ndarray,
+               k_pos: jnp.ndarray, causal: bool = True) -> jnp.ndarray:
+    """Bias tile [H, Q, K] = -slope * |q_pos - k_pos| (causal: k<=q distance).
+
+    q_pos: [Q] absolute query positions, k_pos: [K] absolute key positions.
+    Pure arithmetic on iota — no [S, S] materialization at full length is
+    needed by callers that tile (they pass tile-local position ranges).
+    """
+    dist = q_pos[:, None] - k_pos[None, :]                    # [Q, K]
+    if causal:
+        dist = jnp.maximum(dist, 0)
+    else:
+        dist = jnp.abs(dist)                                   # symmetric (encoder)
+    return -slopes[:, None, None] * dist[None].astype(jnp.float32)

@@ -1,0 +1,155 @@
+"""GPTQ post-training quantization (the 'GPTQ' in Opt-GPTQ).
+
+Hessian-based OBQ, exactly the GPTQ recipe: accumulate H = 2 Σ x xᵀ over
+calibration activations, damp, Cholesky-invert, then quantize weight
+columns one at a time with error feedback into the not-yet-quantized
+columns, lazily batched in blocks of ``block_size`` columns.
+
+This runs OFFLINE (host, numpy float64 for numerical stability) — the
+online artifact is the packed int4 weights consumed by
+``repro/kernels/gptq_matmul`` / ``repro/core/quant``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import QuantConfig
+
+
+@dataclass
+class QuantizedTensor:
+    """Group-wise int4 quantization artifact for one [in, out] weight."""
+    q: np.ndarray          # [in, out] uint8 codes in [0, 2^bits)
+    scales: np.ndarray     # [n_groups, out] float32
+    zeros: np.ndarray      # [n_groups, out] float32 (zero-point in code space)
+    g_idx: np.ndarray      # [in] int32 group id per input feature
+    bits: int
+
+    def dequant(self) -> np.ndarray:
+        return ((self.q.astype(np.float32) - self.zeros[self.g_idx])
+                * self.scales[self.g_idx])
+
+
+class HessianAccumulator:
+    """Streaming H = 2/N Σ xᵀx over calibration batches for one layer input."""
+
+    def __init__(self, in_features: int):
+        self.h = np.zeros((in_features, in_features), dtype=np.float64)
+        self.n = 0
+
+    def update(self, x: np.ndarray) -> None:
+        """x: [..., in_features] activations feeding this weight."""
+        x2 = np.asarray(x, dtype=np.float64).reshape(-1, self.h.shape[0])
+        # running mean keeps H scale-stable across batch counts
+        m = x2.shape[0]
+        self.h *= self.n / max(self.n + m, 1)
+        self.h += (2.0 / max(self.n + m, 1)) * (x2.T @ x2)
+        self.n += m
+
+
+def _group_params(w_col_block: np.ndarray, bits: int, sym: bool
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-output-channel (scale, zero) for one group of input features.
+
+    w_col_block: [g, out]. Returns scale, zero each [out]."""
+    maxq = 2 ** bits - 1
+    wmax = w_col_block.max(axis=0)
+    wmin = w_col_block.min(axis=0)
+    if sym:
+        mag = np.maximum(np.abs(wmax), np.abs(wmin))
+        scale = np.where(mag > 0, 2 * mag / maxq, 1.0)
+        zero = np.full_like(scale, (maxq + 1) / 2)
+    else:
+        wmax = np.maximum(wmax, 0)
+        wmin = np.minimum(wmin, 0)
+        rng = wmax - wmin
+        scale = np.where(rng > 0, rng / maxq, 1.0)
+        zero = np.round(-wmin / scale)
+    return scale.astype(np.float32), zero.astype(np.float32)
+
+
+def _quant_col(col: np.ndarray, scale: np.ndarray, zero: np.ndarray,
+               maxq: int) -> Tuple[np.ndarray, np.ndarray]:
+    q = np.clip(np.round(col / scale + zero), 0, maxq)
+    return q, (q - zero) * scale
+
+
+def gptq_quantize(w: np.ndarray, hessian: Optional[np.ndarray],
+                  cfg: QuantConfig) -> QuantizedTensor:
+    """Quantize one weight matrix ``w [in, out]`` given its input Hessian.
+
+    hessian=None falls back to RTN (identity Hessian) — used as the
+    baseline the paper's GPTQ improves on.
+    """
+    w = np.asarray(w, dtype=np.float64).copy()
+    din, dout = w.shape
+    maxq = 2 ** cfg.bits - 1
+    gs = min(cfg.group_size, din)
+    n_groups = (din + gs - 1) // gs
+
+    h = (np.eye(din) if hessian is None else np.asarray(hessian, np.float64).copy())
+    # dead inputs: no signal -> pin weight to 0, unit curvature
+    dead = np.diag(h) == 0
+    h[dead, dead] = 1.0
+    w[dead, :] = 0.0
+
+    perm = (np.argsort(-np.diag(h)) if cfg.act_order else np.arange(din))
+    inv_perm = np.argsort(perm)
+    w = w[perm]
+    h = h[perm][:, perm]
+
+    damp = cfg.damp_frac * np.mean(np.diag(h))
+    h[np.diag_indices(din)] += damp
+    # Upper Cholesky of H^-1 — the GPTQ trick: error propagation only needs
+    # rows of chol(H^-1, upper).
+    hinv = np.linalg.inv(h)
+    hinv = np.linalg.cholesky((hinv + hinv.T) / 2).T   # upper-triangular
+
+    # group params on the *original* column order so g_idx stays contiguous
+    scales = np.empty((n_groups, dout), np.float32)
+    zeros = np.empty((n_groups, dout), np.float32)
+    g_idx_orig = (np.arange(din) // gs).astype(np.int32)
+    w_orig = w[inv_perm]
+    for g in range(n_groups):
+        sel = g_idx_orig == g
+        scales[g], zeros[g] = _group_params(w_orig[sel], cfg.bits, cfg.sym)
+
+    q_codes = np.zeros((din, dout), np.uint8)
+    bs = cfg.block_size
+    for i0 in range(0, din, bs):
+        i1 = min(i0 + bs, din)
+        wb = w[i0:i1].copy()
+        eb = np.zeros_like(wb)
+        hb = hinv[i0:i1, i0:i1]
+        for j in range(i1 - i0):
+            col = wb[j]
+            g = g_idx_orig[perm[i0 + j]]
+            qc, dq = _quant_col(col, scales[g], zeros[g], maxq)
+            q_codes[perm[i0 + j]] = qc.astype(np.uint8)
+            err = (col - dq) / hb[j, j]
+            if j + 1 < i1 - i0:                        # in-block error feedback
+                wb[j + 1:] -= np.outer(hb[j, j + 1:], err)
+            eb[j] = err
+        if i1 < din:                                    # lazy batched update
+            w[i1:] -= hinv[i0:i1, i1:].T @ eb
+
+    return QuantizedTensor(q=q_codes, scales=scales, zeros=zeros,
+                           g_idx=g_idx_orig, bits=cfg.bits)
+
+
+def rtn_quantize(w: np.ndarray, cfg: QuantConfig) -> QuantizedTensor:
+    """Round-to-nearest baseline (no Hessian, no error feedback)."""
+    return gptq_quantize(w, None, cfg.__class__(**{**cfg.__dict__, "act_order": False}))
+
+
+def quant_error(w: np.ndarray, qt: QuantizedTensor,
+                hessian: Optional[np.ndarray] = None) -> float:
+    """Proxy loss: tr((W-Ŵ)ᵀ H (W-Ŵ)) / numel — the objective GPTQ minimizes."""
+    d = np.asarray(w, np.float64) - qt.dequant().astype(np.float64)
+    if hessian is None:
+        return float((d * d).mean())
+    return float(np.einsum("io,ij,jo->", d, np.asarray(hessian, np.float64), d)
+                 / d.size)

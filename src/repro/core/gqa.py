@@ -1,0 +1,142 @@
+"""Opt-GQA attention math (paper §II).
+
+H query heads are partitioned into ``num_kv_heads`` groups of
+``q_per_kv = H // num_kv_heads`` heads; each group shares one K/V head.
+The TPU-native form of the paper's "shared key-value" insight: Q is reshaped
+to [B, kv, q_per_kv, S, D] so each K/V head is contracted against *all* of
+its group's queries in one batched matmul — the K/V tile is loaded once and
+reused q_per_kv times, multiplying arithmetic intensity by the group size.
+
+This module is the XLA reference path; the Pallas kernels in
+repro/kernels implement the same contraction with explicit VMEM tiling.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.alibi import alibi_bias
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def grouped_attention(
+    q: jnp.ndarray,                     # [B, S_q, H, D]
+    k: jnp.ndarray,                     # [B, S_k, KV, D]
+    v: jnp.ndarray,                     # [B, S_k, KV, D]
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    alibi_slopes: Optional[jnp.ndarray] = None,   # [H] or None
+    q_offset: int | jnp.ndarray = 0,    # absolute position of q[:, 0]
+    logits_soft_cap: float = 0.0,
+) -> jnp.ndarray:
+    """Opt-GQA attention, O(S^2) reference. Returns [B, S_q, H, D]."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    assert H % KV == 0, (H, KV)
+    G = H // KV                          # group size = q_per_kv
+    scale = D ** -0.5
+
+    qg = q.reshape(B, Sq, KV, G, D)
+    # scores [B, KV, G, Sq, Sk] — one contraction per shared K/V head.
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if logits_soft_cap > 0:
+        scores = logits_soft_cap * jnp.tanh(scores / logits_soft_cap)
+
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(k.shape[1])
+    if alibi_slopes is not None:
+        bias = alibi_bias(alibi_slopes, q_pos, k_pos, causal=causal)   # [H,Sq,Sk]
+        scores = scores + bias.reshape(KV, G, Sq, k.shape[1])[None]
+    dist = q_pos[:, None] - k_pos[None, :]
+    mask = jnp.ones_like(dist, dtype=bool)
+    if causal:
+        mask &= dist >= 0
+    if sliding_window > 0:
+        mask &= dist < sliding_window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,                     # [B, H, D] one new token per sequence
+    k_cache: jnp.ndarray,               # [B, S_max, KV, D]
+    v_cache: jnp.ndarray,               # [B, S_max, KV, D]
+    seq_lens: jnp.ndarray,              # [B] valid lengths (inclusive of new tok)
+    *,
+    alibi_slopes: Optional[jnp.ndarray] = None,
+    sliding_window: int = 0,
+) -> jnp.ndarray:
+    """Single-token decode against a (contiguous) cache. Returns [B, H, D]."""
+    B, S, KV, D = k_cache.shape
+    H = q.shape[1]
+    G = H // KV
+    scale = D ** -0.5
+    qg = q.reshape(B, KV, G, D)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    k_pos = jnp.arange(S)
+    q_pos = seq_lens[:, None] - 1                                  # [B,1]
+    if alibi_slopes is not None:
+        dist = jnp.maximum(q_pos - k_pos[None, :], 0)              # [B,S]
+        bias = -alibi_slopes[None, :, None] * dist[:, None, :]     # [B,H,S]
+        scores = scores + bias.reshape(B, KV, G, S)
+    mask = k_pos[None, :] < seq_lens[:, None]                      # [B,S]
+    if sliding_window > 0:
+        mask &= k_pos[None, :] > (q_pos - sliding_window)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def grouped_attention_chunked(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+    causal: bool = True, sliding_window: int = 0,
+    alibi_slopes: Optional[jnp.ndarray] = None,
+    q_offset: int | jnp.ndarray = 0,
+    block_q: int = 512,
+) -> jnp.ndarray:
+    """Flash-structured XLA attention: q-block streaming, per-block remat.
+
+    Same semantics as ``grouped_attention`` but scores never materialize at
+    [S, S]; each q-block's [B, H, block_q, S_k] tile lives only inside a
+    jax.checkpoint region (recomputed in backward). This is the lowering
+    used by the dry-run, where the Pallas kernel cannot compile for the CPU
+    backend but the memory/collective profile must stay kernel-like.
+    """
+    B, Sq, H, D = q.shape
+    if Sq <= block_q:
+        return grouped_attention(q, k, v, causal=causal,
+                                 sliding_window=sliding_window,
+                                 alibi_slopes=alibi_slopes, q_offset=q_offset)
+    assert isinstance(q_offset, int), "chunked path needs a static offset"
+    Sk = k.shape[1]
+    outs = []
+    for i in range(0, Sq, block_q):
+        bq = min(block_q, Sq - i)
+        off = q_offset + i
+        # static K truncation: causal upper bound and window lower bound —
+        # the XLA analogue of the Pallas kernel's masked-tile skipping.
+        k_hi = min(Sk, off + bq) if causal else Sk
+        k_lo = max(0, off + 1 - sliding_window) if sliding_window else 0
+        k_lo = (k_lo // 128) * 128                # keep tiles aligned
+        blk = jax.checkpoint(
+            lambda qi, ks, vs, off=off, k_lo=k_lo: grouped_attention(
+                qi, ks, vs, causal=causal, sliding_window=sliding_window,
+                alibi_slopes=alibi_slopes, q_offset=off - k_lo))
+        outs.append(blk(q[:, i:i + bq], k[:, k_lo:k_hi], v[:, k_lo:k_hi]))
+    return jnp.concatenate(outs, axis=1)
+
+
+def mha_attention(q, k, v, **kw):
+    """Traditional MHA baseline (the paper's comparison point): KV == H."""
+    assert q.shape[2] == k.shape[2], "MHA requires num_kv_heads == num_heads"
+    return grouped_attention(q, k, v, **kw)

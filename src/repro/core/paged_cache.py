@@ -1,0 +1,225 @@
+"""Paged KV-cache (paper §III.A 'Management of Shared Key-Value Vectors').
+
+Two halves, mirroring vLLM on TPU:
+
+* **Host side** — ``BlockAllocator``: pre-allocated fixed pool of block ids,
+  free-list allocation, ref-counted blocks, prefix-hash reuse
+  (copy-on-write), watermark admission. Pure Python, drives the scheduler.
+
+* **Device side** — the pool itself is ONE dense array per layer
+  ``[num_blocks, block_size, kv_heads, head_dim]`` (pre-allocated: the
+  paper's "pre-allocate memory pools to minimize allocation overhead"),
+  plus an int32 ``block_table [max_seqs, max_blocks_per_seq]``. Jitted
+  scatter/gather ops below; the Pallas decode kernel consumes the pool +
+  table directly.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Host-side allocator
+# --------------------------------------------------------------------------
+
+
+class OutOfBlocksError(RuntimeError):
+    pass
+
+
+@dataclass
+class _Block:
+    ref: int = 0
+    token_hash: Optional[bytes] = None   # set only for full, immutable blocks
+
+
+class BlockAllocator:
+    """Ref-counted fixed-pool allocator with prefix reuse.
+
+    Prefix reuse: a *full* block of a prompt is content-addressed by the
+    hash of (all tokens up to and including the block). A new request whose
+    prompt shares that prefix gets the same physical block with ref+1 —
+    the paper's "cache reuse strategy based on request features".
+    """
+
+    def __init__(self, num_blocks: int, block_size: int,
+                 enable_prefix_reuse: bool = True,
+                 watermark_frac: float = 0.01):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.enable_prefix_reuse = enable_prefix_reuse
+        self.watermark = max(1, int(num_blocks * watermark_frac))
+        self._blocks = [_Block() for _ in range(num_blocks)]
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._hash_to_block: Dict[bytes, int] = {}
+        self.stats = {"allocated": 0, "reused": 0, "freed": 0, "cow": 0}
+
+    # -- basics ---------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def can_allocate(self, n: int) -> bool:
+        return self.num_free - n >= self.watermark
+
+    def _alloc_raw(self) -> int:
+        if not self._free:
+            raise OutOfBlocksError("KV block pool exhausted")
+        b = self._free.pop()
+        self._blocks[b].ref = 1
+        self._blocks[b].token_hash = None
+        self.stats["allocated"] += 1
+        return b
+
+    def free(self, block_id: int) -> None:
+        blk = self._blocks[block_id]
+        assert blk.ref > 0, f"double free of block {block_id}"
+        blk.ref -= 1
+        if blk.ref == 0:
+            if blk.token_hash is not None:
+                self._hash_to_block.pop(blk.token_hash, None)
+                blk.token_hash = None
+            self._free.append(block_id)
+            self.stats["freed"] += 1
+
+    def free_sequence(self, block_ids: Sequence[int]) -> None:
+        for b in block_ids:
+            self.free(b)
+
+    # -- prefix-aware prompt allocation ----------------------------------
+    @staticmethod
+    def _hash_prefix(tokens: Sequence[int]) -> bytes:
+        return hashlib.blake2b(np.asarray(tokens, np.int32).tobytes(),
+                               digest_size=16).digest()
+
+    def allocate_prompt(self, tokens: Sequence[int]) -> Tuple[List[int], int]:
+        """Allocate blocks for a prompt. Returns (block_ids, num_reused_blocks).
+
+        Full blocks are content-addressed and may be shared; the trailing
+        partial block is always private.
+        """
+        n = len(tokens)
+        n_full = n // self.block_size
+        ids: List[int] = []
+        reused = 0
+        for i in range(n_full):
+            h = self._hash_prefix(tokens[: (i + 1) * self.block_size])
+            if self.enable_prefix_reuse and h in self._hash_to_block:
+                b = self._hash_to_block[h]
+                self._blocks[b].ref += 1
+                ids.append(b)
+                reused += 1
+                continue
+            b = self._alloc_raw()
+            self._blocks[b].token_hash = h
+            self._hash_to_block[h] = b
+            ids.append(b)
+        if n % self.block_size or n == 0:
+            ids.append(self._alloc_raw())
+        self.stats["reused"] += reused
+        return ids, reused
+
+    def append_slot(self, block_ids: List[int], seq_len: int) -> Tuple[List[int], Optional[int]]:
+        """Ensure capacity for one more token at position seq_len.
+
+        Returns (block_ids, copied_from): if the tail block is shared
+        (ref > 1) it is copy-on-write'd; copied_from is the old block id the
+        device must copy data out of, else None.
+        """
+        copied_from = None
+        if seq_len % self.block_size == 0:
+            block_ids = block_ids + [self._alloc_raw()]
+        else:
+            tail = block_ids[-1]
+            if self._blocks[tail].ref > 1:          # CoW: shared full-prefix tail
+                nb = self._alloc_raw()
+                self.free(tail)
+                block_ids = block_ids[:-1] + [nb]
+                copied_from = tail
+                self.stats["cow"] += 1
+        return block_ids, copied_from
+
+    def utilization(self) -> float:
+        return 1.0 - self.num_free / self.num_blocks
+
+
+# --------------------------------------------------------------------------
+# Device-side pool ops (jit-friendly, used by serve_step and the ref path)
+# --------------------------------------------------------------------------
+
+
+def make_kv_pool(num_layers: int, num_blocks: int, block_size: int,
+                 num_kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+    """Pre-allocated pool: (k_pool, v_pool) each [L, num_blocks, bs, KV, D]."""
+    shape = (num_layers, num_blocks, block_size, num_kv_heads, head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def write_decode_kv(pool: jnp.ndarray, layer: int, k_new: jnp.ndarray,
+                    block_table: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+    """Scatter one token's K (or V) per sequence into the paged pool.
+
+    pool: [L, NB, BS, KV, D]; k_new: [B, KV, D]; block_table: [B, MB];
+    positions: [B] absolute position of the new token.
+    """
+    bs = pool.shape[2]
+    blk = jnp.take_along_axis(block_table, (positions // bs)[:, None], axis=1)[:, 0]
+    off = positions % bs
+    return pool.at[layer, blk, off].set(k_new.astype(pool.dtype))
+
+
+def write_prefill_kv(pool: jnp.ndarray, layer: int, k: jnp.ndarray,
+                     block_table: jnp.ndarray, ctx_lens: jnp.ndarray,
+                     pos_offset: int = 0) -> jnp.ndarray:
+    """Scatter a prompt (or prompt chunk) K/V into the pool.
+
+    k: [B, S, KV, D] (padded); k[:, i] holds position pos_offset + i; only
+    absolute positions < ctx_lens are written.
+    """
+    B, S = k.shape[:2]
+    bs = pool.shape[2]
+    pos = pos_offset + jnp.arange(S)
+    blk = block_table[:, pos // bs]                       # [B, S]
+    off = pos % bs                                         # [S]
+    valid = pos[None, :] < ctx_lens[:, None]               # [B, S]
+    # route invalid tokens to a scratch (last) block offset that is then
+    # overwritten by valid data — use mode='drop' semantics via clipping +
+    # where on the payload.
+    blk = jnp.where(valid, blk, pool.shape[1] - 1)
+    k = jnp.where(valid[..., None, None], k, 0).astype(pool.dtype)
+    flat_idx = (blk * bs + off[None, :]).reshape(-1)
+    upd = k.reshape(B * S, *k.shape[2:])
+    L, NB, BS = pool.shape[:3]
+    lp = pool[layer].reshape(NB * BS, *pool.shape[3:])
+    # guard scratch writes: drop invalid rows entirely
+    flat_idx = jnp.where(valid.reshape(-1), flat_idx, NB * BS)   # OOB -> dropped
+    lp = lp.at[flat_idx].set(upd, mode="drop")
+    return pool.at[layer].set(lp.reshape(NB, BS, *pool.shape[3:]))
+
+
+def gather_kv(pool: jnp.ndarray, layer: int, block_table: jnp.ndarray,
+              max_len: int) -> jnp.ndarray:
+    """Gather a contiguous [B, max_len, KV, D] view (reference path only)."""
+    bs = pool.shape[2]
+    nb = max_len // bs
+    blk = block_table[:, :nb]                              # [B, nb]
+    g = pool[layer][blk]                                   # [B, nb, bs, KV, D]
+    return g.reshape(blk.shape[0], nb * bs, *pool.shape[3:])
+
+
+# --------------------------------------------------------------------------
+# Attention-free (SSM) state pool — paper's memory-pool insight, degenerate
+# block table (see DESIGN.md §5): one slot per sequence, O(1) state.
+# --------------------------------------------------------------------------
+
+
+def make_state_pool(num_layers: int, max_seqs: int, d_inner: int,
+                    ssm_state: int, conv_width: int, dtype=jnp.float32):
+    """(ssm_state_pool [L, B, d_inner, N], conv_state_pool [L, B, d_inner, W-1])."""
+    return (jnp.zeros((num_layers, max_seqs, d_inner, ssm_state), dtype),
+            jnp.zeros((num_layers, max_seqs, d_inner, conv_width - 1), dtype))

@@ -1,0 +1,68 @@
+"""Packed-int4 weight representation + quantized linear (device side).
+
+Pairs with core/gptq.py (which produces the codes offline). The layout is
+TPU-friendly: codes are packed 8-per-int32 along the *in* dimension so the
+Pallas kernel unpacks with shifts/masks in VREGs and feeds bf16 tiles to
+the MXU.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gptq import QuantizedTensor
+
+PACK = 8  # int4 codes per int32 word
+
+
+def pack_int4(q: np.ndarray) -> np.ndarray:
+    """[in, out] uint8 codes (<16) -> [in//8, out] int32 (little-nibble-first)."""
+    din, dout = q.shape
+    pad = (-din) % PACK
+    if pad:
+        q = np.concatenate([q, np.zeros((pad, dout), q.dtype)], axis=0)
+    q = q.reshape(-1, PACK, dout).astype(np.uint32)
+    shifts = (4 * np.arange(PACK, dtype=np.uint32))[None, :, None]
+    return (q << shifts).sum(axis=1).astype(np.int32)
+
+
+def unpack_int4(packed: jnp.ndarray, din: int) -> jnp.ndarray:
+    """[in//8, out] int32 -> [in, out] int32 codes in [0, 16)."""
+    shifts = 4 * jnp.arange(PACK, dtype=jnp.int32)
+    u = packed.astype(jnp.uint32)
+    codes = (u[:, None, :] >> shifts[None, :, None].astype(jnp.uint32)) & 0xF
+    return codes.reshape(-1, packed.shape[-1])[:din].astype(jnp.int32)
+
+
+def make_quant_params(qt: QuantizedTensor, bias: Optional[np.ndarray] = None
+                      ) -> Dict[str, jnp.ndarray]:
+    """Device pytree for one quantized linear layer."""
+    p = {
+        "qweight": jnp.asarray(pack_int4(qt.q)),
+        "scales": jnp.asarray(qt.scales, jnp.float32),
+        "zeros": jnp.asarray(qt.zeros, jnp.float32),
+        "g_idx": jnp.asarray(qt.g_idx, jnp.int32),
+    }
+    if bias is not None:
+        p["bias"] = jnp.asarray(bias)
+    return p
+
+
+def dequantize(params: Dict[str, jnp.ndarray], din: int,
+               dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Full dequant -> [in, out] (reference path / dry-run path)."""
+    codes = unpack_int4(params["qweight"], din).astype(jnp.float32)
+    s = params["scales"][params["g_idx"]]
+    z = params["zeros"][params["g_idx"]]
+    return ((codes - z) * s).astype(dtype)
+
+
+def quant_matmul_ref(x: jnp.ndarray, params: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """y = x @ dequant(W) (+ bias). x: [..., in]."""
+    w = dequantize(params, x.shape[-1], x.dtype)
+    y = x @ w
+    if "bias" in params:
+        y = y + params["bias"].astype(y.dtype)
+    return y

@@ -1,0 +1,175 @@
+"""Pallas TPU flash-attention kernel for Opt-GQA prefill.
+
+Adaptation of the paper's DCU attention kernel to TPU (DESIGN.md §3):
+
+* Q is laid out as [B, KV, G, S, D] (G = q_per_kv): the grid iterates over
+  *KV heads*, and each K/V tile loaded into VMEM is contracted against all
+  G query heads of its group at once — the paper's "shared key-value"
+  becomes a batched MXU matmul with G× higher arithmetic intensity.
+* ALiBi bias is computed from iota inside the tile (never a [S,S] mask).
+* Causal / sliding-window tiles that are fully masked are *skipped*
+  (pl.when) — the sparse-attention half of the paper's title.
+* Online softmax (flash) with f32 accumulators in VMEM scratch.
+
+Tile sizes default to MXU-aligned (128) in S and D.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _fa_kernel(slopes_ref, q_ref, k_ref, v_ref, o_ref,
+               acc_ref, m_ref, l_ref, *,
+               block_q: int, block_k: int, causal: bool,
+               sliding_window: int, use_alibi: bool, q_offset: int,
+               num_k_blocks: int, seq_len_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = q_offset + iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    dist = q_pos - k_pos
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)               # [G, Tq, D]
+        k = k_ref[0, 0].astype(jnp.float32)               # [Tk, D]
+        v = v_ref[0, 0].astype(jnp.float32)               # [Tk, D]
+        scale = q.shape[-1] ** -0.5
+        s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        # s: [G, Tq, Tk]
+        if use_alibi:
+            slopes = slopes_ref[0].astype(jnp.float32)     # [G]
+            s = s - slopes[:, None, None] * jnp.maximum(dist, 0)[None].astype(jnp.float32)
+        mask = k_pos < seq_len_k
+        if causal:
+            mask &= dist >= 0
+        if sliding_window > 0:
+            mask &= dist < sliding_window
+        s = jnp.where(mask[None], s, NEG_INF)
+
+        m_prev = m_ref[...]                               # [G, Tq]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])                  # [G, Tq, Tk]
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+
+    if causal or sliding_window > 0:
+        # tile-skip: live iff some (q,k) in tile satisfies the band.
+        q_hi = q_offset + (iq + 1) * block_q - 1
+        q_lo = q_offset + iq * block_q
+        k_lo = ik * block_k
+        k_hi = (ik + 1) * block_k - 1
+        live = True
+        if causal:
+            live = jnp.logical_and(live, k_lo <= q_hi)
+        if sliding_window > 0:
+            live = jnp.logical_and(live, k_hi > q_lo - sliding_window)
+        pl.when(live)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sliding_window", "block_q", "block_k",
+                     "q_offset", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,                  # [B, S, H, D]
+    k: jnp.ndarray,                  # [B, S_k, KV, D]
+    v: jnp.ndarray,
+    alibi_slopes: Optional[jnp.ndarray] = None,   # [H]
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    # pad seq to tile multiples
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+
+    qg = qp.reshape(B, Sq + pq, KV, G, D).transpose(0, 2, 3, 1, 4)  # [B,KV,G,S,D]
+    kg = kp.transpose(0, 2, 1, 3)                                    # [B,KV,S,D]
+    vg = vp.transpose(0, 2, 1, 3)
+    use_alibi = alibi_slopes is not None
+    slopes = (alibi_slopes.reshape(KV, G) if use_alibi
+              else jnp.zeros((KV, G), jnp.float32))
+
+    nq = (Sq + pq) // block_q
+    nk = (Sk + pk) // block_k
+    grid = (B, KV, nq, nk)
+
+    kernel = functools.partial(
+        _fa_kernel, block_q=block_q, block_k=block_k, causal=causal,
+        sliding_window=sliding_window, use_alibi=use_alibi,
+        q_offset=q_offset, num_k_blocks=nk, seq_len_k=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=0,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, G), lambda b, h, iq, ik: (h, 0)),
+                pl.BlockSpec((1, 1, G, block_q, D),
+                             lambda b, h, iq, ik: (b, h, 0, iq, 0)),
+                pl.BlockSpec((1, 1, block_k, D),
+                             lambda b, h, iq, ik: (b, h, ik, 0)),
+                pl.BlockSpec((1, 1, block_k, D),
+                             lambda b, h, iq, ik: (b, h, ik, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, block_q, D),
+                                   lambda b, h, iq, ik: (b, h, 0, iq, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, block_q, D), jnp.float32),
+                pltpu.VMEM((G, block_q), jnp.float32),
+                pltpu.VMEM((G, block_q), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, Sq + pq, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(slopes, qg, kg, vg)
+
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq + pq, H, D)
+    return out[:, :Sq]

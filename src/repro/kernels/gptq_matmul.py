@@ -1,0 +1,89 @@
+"""Pallas TPU fused dequant-matmul for GPTQ int4 weights (W4A16).
+
+TPU adaptation of the paper's quantized-linear DCU kernel:
+
+* Packed weights stay int32 in HBM (4.0 bits/weight moved — the memory-
+  bound decode matmul speeds up by ~4x over bf16 weight traffic).
+* The k-tile equals the GPTQ group_size, so each grid step touches exactly
+  one (scale, zero) row — no gather on g_idx inside the kernel (GPTQ
+  act_order keeps groups contiguous in the original column order).
+* Unpack = shift/mask in VREGs -> bf16/f32 tile -> MXU matmul; f32
+  accumulator in VMEM scratch across k-tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+PACK = 8
+
+
+def _gptq_mm_kernel(x_ref, qw_ref, s_ref, z_ref, o_ref, acc_ref, *,
+                    nk: int, group_size: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                  # [Tm, Tk]
+    qw = qw_ref[...]                                    # [Tk//8, Tn] int32
+    # unpack nibbles: [Tk//8, 8, Tn] -> [Tk, Tn]
+    shifts = (4 * jax.lax.broadcasted_iota(jnp.uint32, (1, PACK, 1), 1))
+    codes = (qw.astype(jnp.uint32)[:, None, :] >> shifts) & 0xF
+    codes = codes.reshape(group_size, -1).astype(jnp.float32)
+    w = (codes - z_ref[0][None, :]) * s_ref[0][None, :]  # [Tk, Tn] dequant
+    acc_ref[...] += jax.lax.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _final():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def gptq_matmul(
+    x: jnp.ndarray,            # [M, K] activations
+    qweight: jnp.ndarray,      # [K//8, N] int32 packed codes
+    scales: jnp.ndarray,       # [K//group_size, N] f32
+    zeros: jnp.ndarray,        # [K//group_size, N] f32
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    M, K = x.shape
+    N = qweight.shape[1]
+    n_groups = scales.shape[0]
+    assert K % n_groups == 0
+    group_size = K // n_groups
+    assert group_size % PACK == 0
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    pm, pn = (-M) % block_m, (-N) % block_n
+    xp = jnp.pad(x, ((0, pm), (0, 0)))
+    qwp = jnp.pad(qweight, ((0, 0), (0, pn)))
+    sp = jnp.pad(scales, ((0, 0), (0, pn)))
+    zp = jnp.pad(zeros, ((0, 0), (0, pn)))
+    nm, nn, nk = (M + pm) // block_m, (N + pn) // block_n, n_groups
+
+    out = pl.pallas_call(
+        functools.partial(_gptq_mm_kernel, nk=nk, group_size=group_size),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((block_m, group_size), lambda m, n, k: (m, k)),
+            pl.BlockSpec((group_size // PACK, block_n), lambda m, n, k: (k, n)),
+            pl.BlockSpec((1, block_n), lambda m, n, k: (k, n)),
+            pl.BlockSpec((1, block_n), lambda m, n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda m, n, k: (m, n)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((M + pm, N + pn), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xp, qwp, sp, zp)
+    return out[:M, :N]

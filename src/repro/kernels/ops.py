@@ -1,0 +1,92 @@
+"""Public kernel entry points with automatic Pallas / XLA-reference dispatch.
+
+``use_pallas=None`` (default) picks Pallas on TPU, interpret-mode Pallas is
+available for CPU validation, and the pure-XLA reference otherwise.
+The dry-run always lowers the reference path (Pallas cannot lower on the
+CPU backend of the 512-device compile-only mesh).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.paged_attention import paged_attention as _paged_pallas
+from repro.kernels.gptq_matmul import gptq_matmul as _gptq_pallas
+from repro.core.quant import PACK
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, alibi_slopes=None, *, causal=True,
+                    sliding_window=0, q_offset=0,
+                    use_pallas: Optional[bool] = None,
+                    interpret: Optional[bool] = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _flash_pallas(q, k, v, alibi_slopes, causal=causal,
+                             sliding_window=sliding_window, q_offset=q_offset,
+                             interpret=(not _on_tpu()) if interpret is None else interpret)
+    if q.shape[1] > 512 and isinstance(q_offset, int):
+        # flash-structured XLA lowering: no [S,S] materialization
+        from repro.core.gqa import grouped_attention_chunked
+        return grouped_attention_chunked(q, k, v, causal=causal,
+                                         sliding_window=sliding_window,
+                                         alibi_slopes=alibi_slopes,
+                                         q_offset=q_offset)
+    return _ref.flash_attention_ref(q, k, v, causal=causal,
+                                    sliding_window=sliding_window,
+                                    alibi_slopes=alibi_slopes, q_offset=q_offset)
+
+
+def paged_attention(q, k_pool, v_pool, block_table, seq_lens,
+                    alibi_slopes=None, *, sliding_window=0,
+                    use_pallas: Optional[bool] = None,
+                    interpret: Optional[bool] = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _paged_pallas(q, k_pool, v_pool, block_table, seq_lens,
+                             alibi_slopes, sliding_window=sliding_window,
+                             interpret=(not _on_tpu()) if interpret is None else interpret)
+    return _ref.paged_attention_ref(q, k_pool, v_pool, block_table, seq_lens,
+                                    alibi_slopes=alibi_slopes,
+                                    sliding_window=sliding_window)
+
+
+def quant_matmul(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,
+                 use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None,
+                 ctx=None) -> jnp.ndarray:
+    """x: [..., K] @ packed int4 weight -> [..., N]."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        if ctx is not None and ctx.tp_axis is not None:
+            # keep the dequantized weight sharded like its packed source —
+            # otherwise GSPMD may all-gather it (22 GB/step at qwen2 decode)
+            from jax.sharding import PartitionSpec as P
+            from repro.core.quant import dequantize
+            from repro.runtime.sharding import shard
+            n = params["scales"].shape[-1]
+            tp = ctx.tp_axis if n % ctx.tp_size == 0 else None
+            w = dequantize(params, x.shape[-1], x.dtype)
+            w = shard(ctx, w, P(None, tp))
+            y = x @ w
+            if "bias" in params:
+                y = y + params["bias"].astype(y.dtype)
+            return y
+        return _ref.quant_matmul_ref(x, params)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _gptq_pallas(x2, params["qweight"], params["scales"], params["zeros"],
+                     interpret=(not _on_tpu()) if interpret is None else interpret)
+    if "bias" in params:
+        y = y + params["bias"].astype(y.dtype)
+    return y.reshape(*lead, -1)

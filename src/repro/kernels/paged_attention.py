@@ -1,0 +1,134 @@
+"""Pallas TPU paged-attention decode kernel (Opt-GQA over block tables).
+
+The TPU form of the paper's custom DCU decode kernel:
+
+* The KV pool ``[NB, BS, KV, D]`` stays in HBM; the *block table* is a
+  scalar-prefetch operand (SMEM) so the BlockSpec ``index_map`` itself
+  resolves the per-sequence physical block id — the DMA engine walks the
+  page list, which is exactly "paging" on TPU.
+* One grid step = (sequence, kv_head, page): the page's K/V tile is pulled
+  into VMEM once and contracted with *all* G grouped query heads (shared
+  K/V -> batched matmul, the Opt-GQA insight).
+* ALiBi bias from iota in-tile; positions past ``seq_len`` masked; online
+  softmax accumulated in VMEM scratch across pages.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _pa_kernel(block_tables_ref, seq_lens_ref,       # scalar prefetch (SMEM)
+               slopes_ref, q_ref, k_ref, v_ref, o_ref,
+               acc_ref, m_ref, l_ref, *,
+               block_size: int, num_pages: int, use_alibi: bool,
+               sliding_window: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    seq_len = seq_lens_ref[b]
+    k_lo = i * block_size
+
+    @pl.when(k_lo < seq_len)                          # skip pages past the end
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # [G, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)     # [BS, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)     # [BS, D]
+        scale = q.shape[-1] ** -0.5
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        # s: [G, BS]
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1)[0]
+        q_pos = seq_len - 1
+        if use_alibi:
+            slopes = slopes_ref[0].astype(jnp.float32)                 # [G]
+            s = s - slopes[:, None] * jnp.maximum(q_pos - k_pos, 0)[None]
+        mask = k_pos < seq_len
+        if sliding_window > 0:
+            mask &= k_pos > q_pos - sliding_window
+        s = jnp.where(mask[None], s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+
+    @pl.when(i == num_pages - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sliding_window", "interpret"))
+def paged_attention(
+    q: jnp.ndarray,                  # [B, H, D] — one new token per sequence
+    k_pool: jnp.ndarray,             # [NB, BS, KV, D]
+    v_pool: jnp.ndarray,
+    block_table: jnp.ndarray,        # [B, MB] int32
+    seq_lens: jnp.ndarray,           # [B] int32
+    alibi_slopes: Optional[jnp.ndarray] = None,
+    *,
+    sliding_window: int = 0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    NB, BS, KV, _ = k_pool.shape
+    G = H // KV
+    MB = block_table.shape[1]
+    use_alibi = alibi_slopes is not None
+    slopes = (alibi_slopes.reshape(KV, G) if use_alibi
+              else jnp.zeros((KV, G), jnp.float32))
+    qg = q.reshape(B, KV, G, D)
+
+    kernel = functools.partial(
+        _pa_kernel, block_size=BS, num_pages=MB, use_alibi=use_alibi,
+        sliding_window=sliding_window)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,                     # block_table, seq_lens
+            grid=(B, KV, MB),
+            in_specs=[
+                pl.BlockSpec((1, G), lambda b, h, i, bt, sl: (h, 0)),
+                pl.BlockSpec((1, 1, G, D), lambda b, h, i, bt, sl: (b, h, 0, 0)),
+                # the paging step: physical page id comes from the prefetched
+                # block table inside the index_map.
+                pl.BlockSpec((1, BS, 1, D),
+                             lambda b, h, i, bt, sl: (bt[b, i], 0, h, 0)),
+                pl.BlockSpec((1, BS, 1, D),
+                             lambda b, h, i, bt, sl: (bt[b, i], 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D),
+                                   lambda b, h, i, bt, sl: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, D), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table, seq_lens, slopes, qg, k_pool, v_pool)
+
+    return out.reshape(B, H, D)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the *semantic* definitions; kernels must match them to
+``assert_allclose`` tolerance across the test shape/dtype sweep. They are
+also the path the multi-pod dry-run lowers (Pallas TPU kernels cannot
+lower on the CPU backend — see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.core.gqa import decode_attention, grouped_attention
+from repro.core.paged_cache import gather_kv
+from repro.core.quant import quant_matmul_ref as _qmm
+
+
+def flash_attention_ref(q, k, v, *, causal=True, sliding_window=0,
+                        alibi_slopes=None, q_offset=0, segment_ids=None):
+    """[B,S,H,D] x [B,S,KV,D]^2 -> [B,S,H,D]; O(S^2) reference."""
+    del segment_ids
+    return grouped_attention(q, k, v, causal=causal,
+                             sliding_window=sliding_window,
+                             alibi_slopes=alibi_slopes, q_offset=q_offset)
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_table, seq_lens, *,
+                        alibi_slopes=None, sliding_window=0):
+    """Decode attention over the paged pool.
+
+    q: [B, H, D]; k_pool/v_pool: [NB, BS, KV, D] (single layer's pool);
+    block_table: [B, MB]; seq_lens: [B].
+    """
+    bs = k_pool.shape[1]
+    max_len = block_table.shape[1] * bs
+    kc = gather_kv(k_pool[None], 0, block_table, max_len)
+    vc = gather_kv(v_pool[None], 0, block_table, max_len)
+    return decode_attention(q, kc, vc, seq_lens, alibi_slopes=alibi_slopes,
+                            sliding_window=sliding_window)
+
+
+def quant_matmul_ref(x: jnp.ndarray, params: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """W4A16 matmul oracle: dequantize then matmul."""
+    return _qmm(x, params)

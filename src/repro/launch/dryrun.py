@@ -1,0 +1,305 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces
+  * the compile proof (sharding coherence) + memory_analysis of the FULL
+    config (scan-over-layers),
+  * per-chip roofline terms from two small unrolled lowers, extrapolated
+    linearly in layer count (launch/roofline.py),
+and writes one JSON per cell under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--jobs-filter train]
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ALL_SHAPES, ModelConfig, ShapeConfig
+from repro.configs.registry import ARCHS, get_config, shapes_for
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as RF
+from repro.models import registry as MR
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.runtime.sharding import (batch_shardings, make_ctx,
+                                    param_shardings, state_shardings)
+from repro.runtime.train_loop import make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+BIG_PARAMS = 50e9      # >= this: bf16 params + bf16 adam moments
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def _pattern_period(cfg: ModelConfig) -> int:
+    return len(cfg.attn_pattern) if cfg.family == "hybrid" else 1
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               scan_layers: bool, num_layers: Optional[int] = None,
+               quant: bool = False, skip_mixer_core: bool = False,
+               num_microbatches: int = 1, rt_extra: Optional[dict] = None,
+               policy: str = "2d"):
+    """Returns (jitted_fn, arg_specs tuple) for one cell."""
+    if num_layers is not None:
+        cfg = cfg.replace(num_layers=num_layers)
+    ctx = make_ctx(mesh, policy)
+    rt = {"use_pallas": False, "scan_layers": scan_layers,
+          "skip_mixer_core": skip_mixer_core, "ctx": ctx,
+          "remat_policy": jax.checkpoint_policies.nothing_saveable}
+    rt.update(rt_extra or {})
+    big = cfg.num_params() >= BIG_PARAMS
+    pdtype = jnp.bfloat16 if big else jnp.float32
+
+    params = _cast_tree(MR.param_specs(cfg, ep=ctx.tp_size), pdtype)
+    if quant:
+        from repro.models.quantize import quantize_params_rtn
+        params = jax.eval_shape(
+            lambda p: quantize_params_rtn(p, cfg), params)
+    p_sh = param_shardings(ctx, params, cfg)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(
+            moment_dtype="bfloat16" if big else "float32")
+        opt = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), params)
+        o_sh = type(opt)(step=jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec()),
+            mu=param_shardings(ctx, opt.mu, cfg),
+            nu=param_shardings(ctx, opt.nu, cfg))
+        batch = MR.input_specs(cfg, shape)
+        b_sh = batch_shardings(ctx, batch)
+        step = make_train_step(cfg, opt_cfg, ctx, rt,
+                               num_microbatches=num_microbatches)
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+        return fn, (params, opt, batch)
+
+    if shape.kind == "prefill":
+        batch = MR.input_specs(cfg, shape)
+        b_sh = batch_shardings(ctx, batch)
+        if cfg.is_encoder:
+            step = MR.make_forward_step(cfg, ctx, rt)
+            fn = jax.jit(step, in_shardings=(p_sh, b_sh))
+            return fn, (params, batch)
+        state = MR.decode_state_specs(cfg, shape)
+        s_sh = state_shardings(ctx, state, cfg)
+        step = MR.make_prefill_step(cfg, ctx, rt)
+        fn = jax.jit(step, in_shardings=(p_sh, s_sh, b_sh),
+                     out_shardings=(None, s_sh), donate_argnums=(1,))
+        return fn, (params, state, batch)
+
+    # decode
+    spec = MR.input_specs(cfg, shape)
+    state, tokens = spec["state"], spec["tokens"]
+    s_sh = state_shardings(ctx, state, cfg)
+    t_sh = batch_shardings(ctx, tokens)
+    step = MR.make_decode_step(cfg, ctx, rt)
+    fn = jax.jit(step, in_shardings=(p_sh, s_sh, t_sh),
+                 out_shardings=(None, s_sh), donate_argnums=(1,))
+    return fn, (params, state, tokens)
+
+
+HBM_PER_DEVICE = 16 * 2**30                  # TPU v5e
+
+
+def _auto_microbatches(cfg: ModelConfig, shape: ShapeConfig, dp: int) -> int:
+    """Initial microbatch guess for the train memory proof: ~8k tokens
+    per device per microbatch (refined by the fit loop in run_cell)."""
+    tokens_local = shape.global_batch * shape.seq_len // dp
+    nm = max(1, tokens_local // 8192)
+    while shape.global_batch % nm or (shape.global_batch // nm) % dp:
+        nm //= 2
+    return max(1, nm)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             quant: bool = False, skip_cost: bool = False,
+             rt_extra: Optional[dict] = None,
+             num_microbatches: Optional[int] = None,
+             policy: str = "2d", cache_dtype: Optional[str] = None
+             ) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if cache_dtype:
+        cfg = cfg.replace(paging=cfg.paging.__class__(
+            **{**cfg.paging.__dict__, "cache_dtype": cache_dtype}))
+    shape = next(s for s in ALL_SHAPES if s.name == shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_ctx(mesh, policy)
+    chips = mesh.size
+    res: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "quant": quant, "policy": policy,
+    }
+    t0 = time.time()
+    # 1. full-config compile: sharding + memory proof (auto-microbatched
+    #    until the step fits HBM, up to 3 doublings)
+    nm = num_microbatches if num_microbatches is not None else (
+        _auto_microbatches(cfg, shape, ctx.dp_size)
+        if shape.kind == "train" else 1)
+    for _attempt in range(4):
+        # decode steps are unrolled even for the full compile: the graphs
+        # are small, and scan-carried pools trip an XLA-CPU-SPMD carry
+        # resharding (spurious pool all-gathers) that the unrolled form
+        # (and the TPU runtime schedule) does not have.
+        fn, specs = build_cell(cfg, shape, mesh,
+                               scan_layers=(shape.kind != "decode"),
+                               quant=quant, num_microbatches=nm,
+                               rt_extra=rt_extra, policy=policy)
+        compiled = fn.lower(*specs).compile()
+        try:
+            ma = compiled.memory_analysis()
+            peak = int(ma.argument_size_in_bytes + ma.temp_size_in_bytes)
+        except Exception:
+            ma, peak = None, 0
+        if (shape.kind != "train" or peak <= HBM_PER_DEVICE
+                or nm * 2 * ctx.dp_size > shape.global_batch
+                or num_microbatches is not None):
+            break
+        nm *= 2
+    res["num_microbatches"] = nm
+    res["compile_s"] = round(time.time() - t0, 1)
+    if ma is not None:
+        res["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "peak_bytes": peak,
+            "bytes_per_device_gib": round(peak / 2**30, 3),
+            "fits_hbm": bool(peak <= HBM_PER_DEVICE),
+        }
+    else:
+        res["memory"] = {"error": "memory_analysis unavailable"}
+
+    # full-compile collective schedule (scan body counted once — recorded
+    # for the schedule shape, not the totals)
+    res["coll_schedule_scanbody"] = RF.collective_bytes(compiled.as_text())
+
+    if not skip_cost:
+        # 2. per-layer cost: two small unrolled lowers, with and without the
+        #    mixer core (launch/roofline.py docstring), nm=1 for true totals
+        P = _pattern_period(cfg)
+        l_a = P + cfg.num_layers % P
+        l_b = l_a + P
+        terms = {}
+        for skip in (False, True):
+            tt = {}
+            for tag, L in (("a", l_a), ("b", l_b)):
+                f2, sp2 = build_cell(cfg, shape, mesh, scan_layers=False,
+                                     num_layers=L, quant=quant,
+                                     skip_mixer_core=skip, rt_extra=rt_extra,
+                                     policy=policy)
+                tt[tag] = RF.terms_from_compiled(f2.lower(*sp2).compile())
+            terms[skip] = RF.extrapolate(tt["a"], tt["b"], l_a, l_b,
+                                         cfg.num_layers)
+        mixer = RF.mixer_terms(cfg, shape, chips, dp_size=ctx.dp_size)
+        adj = RF.combine(terms[True], mixer)
+        res["roofline_xla_ref"] = terms[False].as_dict()
+        res["roofline"] = adj.as_dict()
+        res["roofline"]["mixer_flops"] = mixer.flops
+        res["roofline"]["mixer_hbm_bytes"] = mixer.hbm_bytes
+        mf = RF.model_flops_per_step(cfg, shape, chips)
+        for key in ("roofline", "roofline_xla_ref"):
+            t = adj if key == "roofline" else terms[False]
+            res[key]["model_flops_per_chip"] = mf
+            res[key]["useful_flop_frac"] = mf / t.flops if t.flops else None
+            res[key]["roofline_frac"] = (
+                (mf / RF.PEAK_FLOPS_BF16) / t.t_bound if t.t_bound else None)
+    res["total_s"] = round(time.time() - t0, 1)
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--quant", action="store_true",
+                    help="int4 GPTQ weights (the Opt-GPTQ configuration)")
+    ap.add_argument("--policy", default="2d", choices=["2d", "dp_only"])
+    ap.add_argument("--cache-dtype", default=None,
+                    help="e.g. float8_e4m3fn for the fp8 KV-cache variant")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill (vLLM-style) token budget")
+    ap.add_argument("--suffix", default="")
+    ap.add_argument("--skip-cost", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    cells = []
+    if args.all:
+        for arch, cfg in ARCHS.items():
+            for s, status in shapes_for(cfg):
+                cells.append((arch, s.name, status))
+    elif args.arch and not args.shape:      # all shapes of one arch
+        for s, status in shapes_for(get_config(args.arch)):
+            cells.append((args.arch, s.name, status))
+    else:
+        cells.append((args.arch, args.shape, "run"))
+
+    n_ok = n_skip = n_fail = 0
+    for arch, shape_name, status in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape_name}__{'multi' if mp else 'single'}" \
+                + ("__q4" if args.quant else "") \
+                + (f"__{args.policy}" if args.policy != "2d" else "") \
+                + (f"__kv8" if args.cache_dtype else "") \
+                + args.suffix
+            out_path = os.path.join(args.out, tag + ".json")
+            if status != "run":
+                json.dump({"arch": arch, "shape": shape_name,
+                           "status": status}, open(out_path, "w"), indent=1)
+                print(f"[skip] {tag}: {status}")
+                n_skip += 1
+                continue
+            try:
+                rt_extra = ({"prefill_chunk": args.prefill_chunk}
+                            if args.prefill_chunk else None)
+                res = run_cell(arch, shape_name, mp, quant=args.quant,
+                               skip_cost=args.skip_cost, policy=args.policy,
+                               cache_dtype=args.cache_dtype,
+                               rt_extra=rt_extra)
+                res["status"] = "ok"
+                json.dump(res, open(out_path, "w"), indent=1)
+                rf = res.get("roofline", {})
+                print(f"[ok]   {tag}: compile={res['compile_s']}s "
+                      f"mem/dev={res['memory'].get('bytes_per_device_gib')}GiB "
+                      f"bottleneck={rf.get('bottleneck')} "
+                      f"roofline_frac={rf.get('roofline_frac')}")
+                n_ok += 1
+            except Exception as e:
+                n_fail += 1
+                json.dump({"arch": arch, "shape": shape_name,
+                           "status": "fail", "error": repr(e),
+                           "trace": traceback.format_exc()},
+                          open(out_path, "w"), indent=1)
+                print(f"[FAIL] {tag}: {e!r}")
+    print(f"done: {n_ok} ok, {n_skip} skip, {n_fail} fail")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Building blocks shared by all model families (pure functions, dict params)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(key, shape, in_axis_size: Optional[int] = None, dtype=jnp.float32):
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    return (jax.random.normal(key, shape) * (fan_in ** -0.5)).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+def norm_init(d: int, kind: str) -> Params:
+    p = {"w": jnp.ones((d,))}
+    if kind == "layernorm":
+        p["b"] = jnp.zeros((d,))
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, kind: str, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (xf * p["w"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * p["w"] + p["b"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, S, H, D]; positions: [S] or [B, S]."""
+    d = x.shape[-1]
+    d2 = d // 2
+    freqs = theta ** (-jnp.arange(0, d2, dtype=jnp.float32) / d2)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [B,S,D/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :d2], x[..., d2:2 * d2]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    if 2 * d2 < d:                                              # odd head_dim tail
+        rot = jnp.concatenate([rot, x[..., 2 * d2:]], -1)
+    return rot.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- activations
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------- dense MLP
+def mlp_init(key, d: int, f: int, act: str) -> Params:
+    ks = jax.random.split(key, 3)
+    if act in ("silu", "swiglu"):
+        return {"w_gate": dense_init(ks[0], (d, f)),
+                "w_up": dense_init(ks[1], (d, f)),
+                "w_down": dense_init(ks[2], (f, d), in_axis_size=f)}
+    return {"w_up": dense_init(ks[1], (d, f)),
+            "w_down": dense_init(ks[2], (f, d), in_axis_size=f)}
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, act: str,
+              rt: Optional[dict] = None) -> jnp.ndarray:
+    if "w_gate" in p:
+        g = linear(x, p["w_gate"], rt)
+        u = linear(x, p["w_up"], rt)
+        return linear(act_fn(act)(g) * u, p["w_down"], rt)
+    u = act_fn(act)(linear(x, p["w_up"], rt))
+    return linear(u, p["w_down"], rt)
+
+
+# ---------------------------------------------------------------- linear
+def linear(x: jnp.ndarray, w, rt: Optional[dict] = None,
+           out_tail: Optional[tuple] = None) -> jnp.ndarray:
+    """x: [..., din] @ w.
+
+    ``w`` is either a dense array whose leading dims multiply to din
+    (e.g. wq [d, H, Dh] or wo [H, Dh, d]) or a GPTQ quant dict
+    {qweight, scales, zeros, g_idx} (int4 path, paper §III) — then
+    ``out_tail`` gives the logical output shape tail if non-2D.
+    """
+    din = x.shape[-1]
+    if isinstance(w, dict):
+        from repro.kernels.ops import quant_matmul
+        rt = rt or {}
+        y = quant_matmul(x, w, use_pallas=rt.get("use_pallas"),
+                         interpret=rt.get("interpret"), ctx=rt.get("ctx"))
+    else:
+        # split w dims into (input dims, output dims) at din
+        n, i = 1, 0
+        while n < din and i < w.ndim:
+            n *= w.shape[i]
+            i += 1
+        assert n == din, (w.shape, din)
+        out_tail = out_tail or w.shape[i:]
+        y = x @ w.reshape(din, -1).astype(x.dtype)
+    if out_tail is not None and len(out_tail) > 1:
+        y = y.reshape(*y.shape[:-1], *out_tail)
+    return y
+
+
+# ---------------------------------------------------------------- embedding
+def embed_init(key, vocab: int, d: int) -> jnp.ndarray:
+    return jax.random.normal(key, (vocab, d)) * 0.02
+
+
+def unembed(x: jnp.ndarray, embed: jnp.ndarray,
+            head: Optional[jnp.ndarray]) -> jnp.ndarray:
+    if head is not None:
+        return x @ head.astype(x.dtype)
+    return x @ embed.T.astype(x.dtype)

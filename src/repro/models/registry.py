@@ -1,0 +1,118 @@
+"""Model-level entry points: step functions + ShapeDtypeStruct input specs
+for every (architecture × shape) dry-run cell."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+
+I32 = jnp.int32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def decode_geometry(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, int]:
+    """Pool sizing for a decode cell."""
+    bs = cfg.paging.block_size
+    B = shape.global_batch
+    if cfg.sliding_window and cfg.layer_kind(0) != "ssm":
+        # ring cache: one block-aligned window (+1 block) per sequence
+        mb = cfg.sliding_window // bs + 1
+    else:
+        mb = math.ceil(shape.seq_len / bs)
+    # hybrid/dense full-attn archs without sliding: full-length table
+    has_full = any(cfg.layer_kind(i) == "full" for i in range(cfg.num_layers))
+    if has_full:
+        mb = math.ceil(shape.seq_len / bs)
+    nb = B * mb
+    return {"block_size": bs, "max_blocks_per_seq": mb, "num_blocks": nb,
+            "max_seqs": B}
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig,
+                       dtype=None) -> Dict[str, Any]:
+    dtype = dtype or jnp.dtype(cfg.paging.cache_dtype)
+    g = decode_geometry(cfg, shape)
+    na, nr = T.attn_layer_count(cfg)
+    st: Dict[str, Any] = {"seq_lens": sds((g["max_seqs"],), I32)}
+    if na:
+        pool = (na, g["num_blocks"], g["block_size"], cfg.num_kv_heads,
+                cfg.resolved_head_dim)
+        st["k_pool"] = sds(pool, dtype)
+        st["v_pool"] = sds(pool, dtype)
+        st["block_table"] = sds((g["max_seqs"], g["max_blocks_per_seq"]), I32)
+    if cfg.family == "ssm":
+        din = cfg.ssm_expand * cfg.d_model
+        st["ssm_h"] = sds((cfg.num_layers, g["max_seqs"], din, cfg.ssm_state),
+                          jnp.float32)
+        st["ssm_conv"] = sds((cfg.num_layers, g["max_seqs"], din,
+                              cfg.ssm_conv - 1), dtype)
+    if cfg.family == "hybrid" and nr:
+        w = cfg.lru_width or cfg.d_model
+        st["lru_h"] = sds((nr, g["max_seqs"], w), jnp.float32)
+        st["rec_conv"] = sds((nr, g["max_seqs"], w, 3), dtype)
+    return st
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step function's data arguments."""
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    if shape.kind == "train":
+        if cfg.is_encoder:
+            return {"frames": sds((B, S, d), jnp.bfloat16),
+                    "labels": sds((B, S), I32)}
+        batch: Dict[str, Any] = {"tokens": sds((B, S + 1), I32)}
+        if cfg.frontend == "vision_patches":
+            batch["vision_embeds"] = sds((B, cfg.num_prefix_embeds, d),
+                                         jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.is_encoder:
+            return {"frames": sds((B, S, d), jnp.bfloat16)}
+        batch = {"tokens": sds((B, S), I32), "ctx_lens": sds((B,), I32)}
+        if cfg.frontend == "vision_patches":
+            batch["vision_embeds"] = sds((B, cfg.num_prefix_embeds, d),
+                                         jnp.bfloat16)
+        return batch
+    # decode
+    return {"tokens": sds((B,), I32), "state": decode_state_specs(cfg, shape)}
+
+
+def param_specs(cfg: ModelConfig, ep: int = 1,
+                dtype=jnp.float32) -> Any:
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda k: T.init_params(cfg, k, ep), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------- steps
+def make_forward_step(cfg: ModelConfig, ctx=None, rt=None):
+    def step(params, batch):
+        return T.forward(cfg, params, batch, ctx, rt)
+    return step
+
+
+def make_loss_step(cfg: ModelConfig, ctx=None, rt=None):
+    def step(params, batch):
+        return T.loss_fn(cfg, params, batch, ctx, rt)
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx=None, rt=None):
+    def step(params, state, batch):
+        return T.prefill(cfg, params, state, batch, ctx, rt)
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, ctx=None, rt=None):
+    def step(params, state, tokens):
+        return T.decode_step(cfg, params, state, tokens, ctx, rt)
+    return step

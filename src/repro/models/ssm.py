@@ -1,0 +1,271 @@
+"""Attention-free mixers: Mamba-1 selective SSM and RG-LRU (recurrentgemma).
+
+Both scan over time in remat'd chunks (chunk-boundary carries saved,
+in-chunk activations recomputed in backward) so long sequences don't blow
+activation memory — the TPU stand-in for the paper's memory-pool thinking
+applied to training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, linear
+
+Params = Dict[str, jnp.ndarray]
+
+CHUNK = 128
+
+
+def _chunked_time_scan(step, carry, xs_time_major, chunk: int):
+    """lax.scan over time in remat'd chunks. xs leaves: [S, ...]."""
+    S = jax.tree.leaves(xs_time_major)[0].shape[0]
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        xs_time_major = jax.tree.map(
+            lambda a: jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1)),
+            xs_time_major)
+    n = (S + pad) // c
+    xs_c = jax.tree.map(lambda a: a.reshape(n, c, *a.shape[1:]), xs_time_major)
+
+    @jax.checkpoint
+    def chunk_body(h, xc):
+        return jax.lax.scan(step, h, xc)
+
+    h, ys = jax.lax.scan(chunk_body, carry, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape(n * c, *a.shape[2:])[:S], ys)
+    return h, ys
+
+
+# ---------------------------------------------------------------- Mamba-1
+def dt_rank(cfg: ModelConfig) -> int:
+    return (cfg.d_model + cfg.ssm_state - 1) // cfg.ssm_state
+
+
+def ssm_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    R = dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * din)),
+        "conv_w": dense_init(ks[1], (din, cfg.ssm_conv)) * 0.5,
+        "conv_b": jnp.zeros((din,)),
+        "x_proj": dense_init(ks[2], (din, R + 2 * N)),
+        "dt_proj": dense_init(ks[3], (R, din)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (din,)) *
+                    (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)))),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32),
+                                  (din, 1))),
+        "D": jnp.ones((din,)),
+        "out_proj": dense_init(ks[5], (din, d), in_axis_size=din),
+    }
+
+
+def _ssm_inner(cfg, p, xc, z, h0, mask=None, rt=None):
+    """Selective scan. xc: [B,S,din] post-conv, z: gate. Returns (y, h).
+
+    mask: [B,S] — False positions are state-transparent (dt=0)."""
+    B, S, din = xc.shape
+    N = cfg.ssm_state
+    R = dt_rank(cfg)
+    dbc = xc @ p["x_proj"].astype(xc.dtype)
+    dt_r, b_ssm, c_ssm = jnp.split(dbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        dt_r @ p["dt_proj"].astype(xc.dtype)
+        + p["dt_bias"].astype(xc.dtype)).astype(jnp.float32)   # [B,S,din]
+    if mask is not None:
+        dt = jnp.where(mask[..., None], dt, 0.0)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # [din,N]
+
+    if (rt or {}).get("skip_mixer_core"):
+        # roofline decomposition lower: the selective scan is replaced by a
+        # DCE-proof identity (kernel terms added analytically).
+        y = xc * (1 + 1e-30 * (dt.sum() + b_ssm.sum() + c_ssm.sum()
+                               + A.sum()))
+        y = y + xc * p["D"].astype(xc.dtype)
+        return y * jax.nn.silu(z), h0
+
+    xs = (dt.transpose(1, 0, 2), xc.transpose(1, 0, 2).astype(jnp.float32),
+          b_ssm.transpose(1, 0, 2).astype(jnp.float32),
+          c_ssm.transpose(1, 0, 2).astype(jnp.float32))
+
+    def step(h, x_t):
+        dt_t, u_t, b_t, c_t = x_t                              # [B,din],[B,din],[B,N]x2
+        da = jnp.exp(dt_t[..., None] * A[None])                # [B,din,N]
+        h = da * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h, ys = _chunked_time_scan(step, h0, xs, CHUNK)
+    y = ys.transpose(1, 0, 2).astype(xc.dtype)                 # [B,S,din]
+    y = y + xc * p["D"].astype(xc.dtype)
+    return y * jax.nn.silu(z), h
+
+
+def ssm_apply(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+              rt: Optional[dict] = None) -> jnp.ndarray:
+    """Train/prefill. x: [B,S,d] -> [B,S,d]."""
+    B, S, d = x.shape
+    din = cfg.ssm_expand * d
+    xz = linear(x, p["in_proj"], rt)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    # depthwise causal conv over time
+    W = cfg.ssm_conv
+    xp = jnp.pad(xi, ((0, 0), (W - 1, 0), (0, 0)))
+    xc = sum(xp[:, i:i + S] * p["conv_w"][:, i].astype(x.dtype)
+             for i in range(W)) + p["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc)
+    h0 = jnp.zeros((B, din, cfg.ssm_state), jnp.float32)
+    y, _ = _ssm_inner(cfg, p, xc, z, h0, rt=rt)
+    return linear(y, p["out_proj"], rt)
+
+
+def ssm_prefill(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                mask: jnp.ndarray, ctx_lens: jnp.ndarray,
+                rt: Optional[dict] = None):
+    """Prefill returning (y, h_final, conv_state).
+
+    Padded positions (mask False) are made state-transparent: dt -> 0 gives
+    exp(0*A)=1 and zero input, so h_final is the state at ctx_len.
+    """
+    B, S, d = x.shape
+    din = cfg.ssm_expand * d
+    W = cfg.ssm_conv
+    xz = linear(x, p["in_proj"], rt)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = jnp.where(mask[..., None], xi, 0)
+    xp = jnp.pad(xi, ((0, 0), (W - 1, 0), (0, 0)))
+    xc = sum(xp[:, i:i + S] * p["conv_w"][:, i].astype(x.dtype)
+             for i in range(W)) + p["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc)
+    xc = jnp.where(mask[..., None], xc, 0)
+    h0 = jnp.zeros((B, din, cfg.ssm_state), jnp.float32)
+    y, h = _ssm_inner(cfg, p, xc, z, h0, mask=mask, rt=rt)
+    # conv state: the last W-1 (valid) xi values per sequence
+    idx = ctx_lens[:, None] - (W - 1) + jnp.arange(W - 1)[None, :]   # [B,W-1]
+    valid = idx >= 0
+    gathered = jnp.take_along_axis(xi, jnp.maximum(idx, 0)[..., None], axis=1)
+    conv_state = jnp.where(valid[..., None], gathered, 0).transpose(0, 2, 1)
+    return linear(y, p["out_proj"], rt), h, conv_state
+
+
+def ssm_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+               h: jnp.ndarray, conv_state: jnp.ndarray,
+               rt: Optional[dict] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One step. x: [B,d]; h: [B,din,N]; conv_state: [B,din,W-1]."""
+    B, d = x.shape
+    W = cfg.ssm_conv
+    xz = linear(x, p["in_proj"], rt)
+    xi, z = jnp.split(xz, 2, axis=-1)                          # [B,din]
+    window = jnp.concatenate([conv_state, xi[..., None]], axis=-1)  # [B,din,W]
+    xc = jnp.einsum("bdw,dw->bd", window.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32))
+    xc = jax.nn.silu(xc + p["conv_b"]).astype(x.dtype)
+    new_conv = window[..., 1:]
+    y3, h = _ssm_inner(cfg, p, xc[:, None, :], z[:, None, :],
+                       h.astype(jnp.float32), rt=rt)
+    y = linear(y3[:, 0], p["out_proj"], rt)
+    return y, h, new_conv.astype(conv_state.dtype)
+
+
+# ---------------------------------------------------------------- RG-LRU
+def rglru_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, w)),
+        "w_gate_rec": dense_init(ks[1], (d, w)),
+        "conv_w": dense_init(ks[2], (w, 4)) * 0.5,
+        "wr": dense_init(ks[3], (w, w)),
+        "wi": dense_init(ks[4], (w, w)),
+        "a_param": jnp.log(jnp.exp(
+            jnp.linspace(0.9, 0.999, w) * 8.0) - 1.0) / 8.0,   # softplus^-1-ish
+        "w_out_rec": dense_init(ks[5], (w, d)),
+    }
+
+
+C_RGLRU = 8.0
+
+
+def _rglru_scan(p, u, h0, mask=None, rt=None):
+    """u: [B,S,w] post-conv input. Returns (h_seq [B,S,w], h_last).
+
+    mask: [B,S] — False positions keep the state unchanged (a=1, input=0)."""
+    r = jax.nn.sigmoid(u @ p["wr"].astype(u.dtype)).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ p["wi"].astype(u.dtype)).astype(jnp.float32)
+    log_a = -C_RGLRU * jax.nn.softplus(p["a_param"].astype(jnp.float32))
+    a = jnp.exp(log_a[None, None] * r)                         # [B,S,w]
+    gated = (i * u.astype(jnp.float32)) * jnp.sqrt(
+        jnp.maximum(1.0 - a * a, 1e-8))
+    if mask is not None:
+        a = jnp.where(mask[..., None], a, 1.0)
+        gated = jnp.where(mask[..., None], gated, 0.0)
+    if (rt or {}).get("skip_mixer_core"):
+        return gated.astype(u.dtype) * (1 + 1e-30 * a.sum()), h0
+    xs = (a.transpose(1, 0, 2), gated.transpose(1, 0, 2))
+
+    def step(h, x_t):
+        a_t, g_t = x_t
+        h = a_t * h + g_t
+        return h, h
+
+    h, hs = _chunked_time_scan(step, h0, xs, CHUNK)
+    return hs.transpose(1, 0, 2).astype(u.dtype), h
+
+
+def rglru_apply(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                rt: Optional[dict] = None) -> jnp.ndarray:
+    """Recurrent block: conv -> RG-LRU -> gate -> out. x: [B,S,d]."""
+    B, S, d = x.shape
+    u = linear(x, p["w_in"], rt)                               # [B,S,w]
+    gate = jax.nn.gelu(linear(x, p["w_gate_rec"], rt))
+    up = jnp.pad(u, ((0, 0), (3, 0), (0, 0)))
+    uc = sum(up[:, i:i + S] * p["conv_w"][:, i].astype(x.dtype)
+             for i in range(4))
+    h0 = jnp.zeros((B, u.shape[-1]), jnp.float32)
+    hs, _ = _rglru_scan(p, uc, h0, rt=rt)
+    return linear(hs * gate, p["w_out_rec"], rt)
+
+
+def rglru_prefill(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                  mask: jnp.ndarray, ctx_lens: jnp.ndarray,
+                  rt: Optional[dict] = None):
+    """Prefill returning (y, h_final [B,w], conv_state [B,w,3])."""
+    B, S, d = x.shape
+    u = linear(x, p["w_in"], rt)
+    u = jnp.where(mask[..., None], u, 0)
+    gate = jax.nn.gelu(linear(x, p["w_gate_rec"], rt))
+    up = jnp.pad(u, ((0, 0), (3, 0), (0, 0)))
+    uc = sum(up[:, i:i + S] * p["conv_w"][:, i].astype(x.dtype)
+             for i in range(4))
+    h0 = jnp.zeros((B, u.shape[-1]), jnp.float32)
+    hs, h = _rglru_scan(p, uc, h0, mask=mask, rt=rt)
+    idx = ctx_lens[:, None] - 3 + jnp.arange(3)[None, :]
+    valid = idx >= 0
+    gathered = jnp.take_along_axis(u, jnp.maximum(idx, 0)[..., None], axis=1)
+    conv_state = jnp.where(valid[..., None], gathered, 0).transpose(0, 2, 1)
+    return linear(hs * gate, p["w_out_rec"], rt), h, conv_state
+
+
+def rglru_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                 h: jnp.ndarray, conv_state: jnp.ndarray,
+                 rt: Optional[dict] = None):
+    """One step. x: [B,d]; h: [B,w]; conv_state: [B,w,3]."""
+    u = linear(x, p["w_in"], rt)                               # [B,w]
+    gate = jax.nn.gelu(linear(x, p["w_gate_rec"], rt))
+    window = jnp.concatenate([conv_state, u[..., None]], axis=-1)   # [B,w,4]
+    uc = jnp.einsum("bwk,wk->bw", window.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32)).astype(x.dtype)
+    hs, h_new = _rglru_scan(p, uc[:, None, :], h.astype(jnp.float32), rt=rt)
+    y = linear(hs[:, 0] * gate, p["w_out_rec"], rt)
+    return y, h_new, window[..., 1:].astype(conv_state.dtype)

@@ -1,0 +1,600 @@
+"""Model assembly for all families: init / forward / loss / prefill / decode.
+
+Homogeneous stacks (dense, moe, ssm, encoder, vlm) scan over layer-stacked
+params (fast compiles at 64+ layers); the heterogeneous hybrid
+(recurrentgemma) python-loops over two per-kind stacks. Decode threads the
+paged KV pool / SSM state pools through the layer loop.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (attn_apply, attn_decode, attn_init,
+                                    attn_prefill)
+from repro.models.layers import (apply_norm, embed_init, linear, mlp_apply,
+                                 mlp_init, norm_init, unembed)
+from repro.models.moe import moe_apply, moe_init
+from repro.runtime.sharding import ParallelCtx, shard
+
+Params = Dict[str, Any]
+
+
+def _is_homogeneous(cfg: ModelConfig) -> bool:
+    return len({cfg.layer_kind(i) for i in range(cfg.num_layers)}) == 1
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, kind: str, ep: int = 1) -> Params:
+    ks = jax.random.split(key, 4)
+    if kind == "ssm":
+        return {"attn_norm": norm_init(cfg.d_model, cfg.norm),
+                "ssm": ssm_mod.ssm_init(ks[0], cfg)}
+    p: Params = {"attn_norm": norm_init(cfg.d_model, cfg.norm),
+                 "mlp_norm": norm_init(cfg.d_model, cfg.norm)}
+    if kind == "recurrent":
+        p["rec"] = ssm_mod.rglru_init(ks[0], cfg)
+    else:
+        p["attn"] = attn_init(ks[0], cfg)
+    if cfg.num_experts:
+        p["moe"] = moe_init(ks[1], cfg, ep)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, ep: int = 1) -> Params:
+    ks = jax.random.split(key, 6)
+    params: Params = {"embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+                      "final_norm": norm_init(cfg.d_model, cfg.norm)}
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(ks[1], (cfg.d_model, cfg.vocab_size))
+                          * cfg.d_model ** -0.5)
+    if cfg.frontend == "audio_frames":
+        params["frontend_proj"] = (jax.random.normal(
+            ks[2], (cfg.d_model, cfg.d_model)) * cfg.d_model ** -0.5)
+
+    L = cfg.num_layers
+    if _is_homogeneous(cfg):
+        kind = cfg.layer_kind(0)
+        lkeys = jax.random.split(ks[3], L)
+        params["layers"] = jax.vmap(
+            lambda k: init_layer(k, cfg, kind, ep))(lkeys)
+    else:
+        kinds = [cfg.layer_kind(i) for i in range(L)]
+        for kset, name in ((("recurrent",), "rec_layers"),
+                           (("full", "sliding"), "attn_layers")):
+            idx = [i for i, k in enumerate(kinds) if k in kset]
+            if idx:
+                lkeys = jax.random.split(jax.random.fold_in(ks[3], hash(name) % 2**30),
+                                         len(idx))
+                params[name] = jax.vmap(
+                    lambda k, kk=kinds[idx[0]]: init_layer(k, cfg, kk, ep))(lkeys)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Layer application (train / plain forward)
+# --------------------------------------------------------------------------
+
+def apply_layer(cfg: ModelConfig, lp: Params, x: jnp.ndarray, kind: str,
+                ctx: Optional[ParallelCtx], rt: Optional[dict]) -> jnp.ndarray:
+    h = apply_norm(lp["attn_norm"], x, cfg.norm, cfg.norm_eps)
+    if kind == "ssm":
+        return x + ssm_mod.ssm_apply(cfg, lp["ssm"], h, rt)
+    if kind == "recurrent":
+        mix = ssm_mod.rglru_apply(cfg, lp["rec"], h, rt)
+    else:
+        mix = attn_apply(cfg, lp["attn"], h, ctx, kind=kind, rt=rt)
+    x = x + mix
+    h = apply_norm(lp["mlp_norm"], x, cfg.norm, cfg.norm_eps)
+    if cfg.num_experts:
+        y = moe_apply(cfg, lp["moe"], h, ctx, rt)
+    else:
+        y = mlp_apply(lp["mlp"], h, cfg.act, rt)
+    if ctx is not None:
+        y = shard(ctx, y, P(ctx.dp_axes, None, None))
+    return x + y
+
+
+def _embed_inputs(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+                  ctx, rt) -> jnp.ndarray:
+    if cfg.frontend == "audio_frames":
+        x = linear(batch["frames"], params["frontend_proj"], rt)
+    else:
+        x = params["embed"][batch["tokens"]]
+        if cfg.frontend == "vision_patches" and "vision_embeds" in batch:
+            x = jnp.concatenate(
+                [batch["vision_embeds"].astype(x.dtype), x], axis=1)
+    if ctx is not None:
+        x = shard(ctx, x, P(ctx.dp_axes, None, None))
+    return x.astype(jnp.dtype(cfg.dtype))
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+            ctx: Optional[ParallelCtx] = None,
+            rt: Optional[dict] = None) -> jnp.ndarray:
+    """Full causal (or bidirectional-encoder) forward -> logits [B, S, V]."""
+    rt = rt or {}
+    x = _embed_inputs(cfg, params, batch, ctx, rt)
+    L = cfg.num_layers
+
+    if _is_homogeneous(cfg) and rt.get("scan_layers", True):
+        kind = cfg.layer_kind(0)
+        policy = rt.get("remat_policy")
+
+        def body(h, lp):
+            out = apply_layer(cfg, lp, h, kind, ctx, rt)
+            return out, None
+
+        body_r = jax.checkpoint(body, policy=policy)
+        x, _ = jax.lax.scan(body_r, x, params["layers"])
+    else:
+        counters = {"rec_layers": 0, "attn_layers": 0, "layers": 0}
+        for i in range(L):
+            kind = cfg.layer_kind(i)
+            if _is_homogeneous(cfg):
+                stack, cname = params["layers"], "layers"
+            elif kind == "recurrent":
+                stack, cname = params["rec_layers"], "rec_layers"
+            else:
+                stack, cname = params["attn_layers"], "attn_layers"
+            j = counters[cname]
+            counters[cname] += 1
+            lp = jax.tree.map(lambda a: a[j], stack)
+            layer_fn = jax.checkpoint(
+                lambda p_, x_, kind_=kind: apply_layer(cfg, p_, x_, kind_,
+                                                       ctx, rt),
+                policy=rt.get("remat_policy"))
+            x = layer_fn(lp, x)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = unembed(x, params["embed"], params.get("head"))
+    if ctx is not None:
+        tp = ctx.tp_axis if cfg.vocab_size % ctx.tp_size == 0 else None
+        logits = shard(ctx, logits, P(ctx.dp_axes, None, tp))
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+            ctx: Optional[ParallelCtx] = None,
+            rt: Optional[dict] = None) -> jnp.ndarray:
+    """Next-token (or frame-label) cross entropy, mean over valid tokens."""
+    if cfg.is_encoder:
+        logits = forward(cfg, params, batch, ctx, rt)
+        labels = batch["labels"]
+    else:
+        tokens = batch["tokens"]
+        inp = {**batch, "tokens": tokens[:, :-1]}
+        logits = forward(cfg, params, inp, ctx, rt)
+        labels = tokens[:, 1:]
+        if cfg.frontend == "vision_patches" and "vision_embeds" in batch:
+            logits = logits[:, batch["vision_embeds"].shape[1]:]
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+# --------------------------------------------------------------------------
+# Serving: decode state + prefill + decode_step
+# --------------------------------------------------------------------------
+
+def attn_layer_count(cfg: ModelConfig) -> Tuple[int, int]:
+    """(#attention layers, #recurrent/ssm layers)."""
+    kinds = [cfg.layer_kind(i) for i in range(cfg.num_layers)]
+    na = sum(k in ("full", "sliding") for k in kinds)
+    return na, cfg.num_layers - na
+
+
+def make_decode_state(cfg: ModelConfig, max_seqs: int, num_blocks: int,
+                      max_blocks_per_seq: int,
+                      dtype=None) -> Dict[str, jnp.ndarray]:
+    dtype = dtype if dtype is not None else jnp.dtype(cfg.paging.cache_dtype)
+    from repro.core.paged_cache import make_kv_pool
+    na, nr = attn_layer_count(cfg)
+    st: Dict[str, jnp.ndarray] = {
+        "seq_lens": jnp.zeros((max_seqs,), jnp.int32),
+    }
+    if na:
+        bs = cfg.paging.block_size
+        kp, vp = make_kv_pool(na, num_blocks, bs, cfg.num_kv_heads,
+                              cfg.resolved_head_dim, dtype)
+        st.update(k_pool=kp, v_pool=vp,
+                  block_table=jnp.zeros((max_seqs, max_blocks_per_seq),
+                                        jnp.int32))
+    if cfg.family == "ssm":
+        din = cfg.ssm_expand * cfg.d_model
+        st["ssm_h"] = jnp.zeros((cfg.num_layers, max_seqs, din, cfg.ssm_state),
+                                jnp.float32)
+        st["ssm_conv"] = jnp.zeros((cfg.num_layers, max_seqs, din,
+                                    cfg.ssm_conv - 1), dtype)
+    if cfg.family == "hybrid" and nr:
+        w = cfg.lru_width or cfg.d_model
+        st["lru_h"] = jnp.zeros((nr, max_seqs, w), jnp.float32)
+        st["rec_conv"] = jnp.zeros((nr, max_seqs, w, 3), dtype)
+    return st
+
+
+def decode_step(cfg: ModelConfig, params: Params,
+                state: Dict[str, jnp.ndarray], tokens: jnp.ndarray,
+                ctx: Optional[ParallelCtx] = None,
+                rt: Optional[dict] = None
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One decode step for every active slot.
+
+    tokens: [B] last generated token per slot. state["seq_lens"] must
+    already count the new token. Returns (logits [B, V], new state).
+    """
+    rt = rt or {}
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))      # [B, d]
+    state = dict(state)
+    seq_lens = state["seq_lens"]
+    L = cfg.num_layers
+    homog = _is_homogeneous(cfg)
+    kind0 = cfg.layer_kind(0)
+
+    pool_spec = None
+    if ctx is not None:
+        kv_tp = (ctx.tp_axis if ctx.tp_axis and
+                 cfg.num_kv_heads % ctx.tp_size == 0 else None)
+        pool_spec = P(None, ctx.dp_axes, None, kv_tp, None)
+
+    def _pin_pools(kp, vp):
+        # keep the scan-carried pools sharded over dp between iterations —
+        # without this GSPMD re-gathers the whole pool every layer.
+        if pool_spec is not None:
+            kp = shard(ctx, kp, pool_spec)
+            vp = shard(ctx, vp, pool_spec)
+        return kp, vp
+
+    if homog and kind0 in ("full", "sliding") and rt.get("scan_layers", True):
+        def body(carry, inp):
+            h, kp, vp = carry
+            lp, li = inp
+            hn = apply_norm(lp["attn_norm"], h, cfg.norm, cfg.norm_eps)
+            mix, kp, vp = attn_decode(
+                cfg, lp["attn"], hn, ctx, kind=kind0, k_pool=kp, v_pool=vp,
+                layer=li, block_table=state["block_table"],
+                seq_lens=seq_lens, rt=rt)
+            kp, vp = _pin_pools(kp, vp)
+            h = h + mix
+            hn = apply_norm(lp["mlp_norm"], h, cfg.norm, cfg.norm_eps)
+            if cfg.num_experts:
+                y = moe_apply(cfg, lp["moe"], hn[:, None, :], ctx, rt)[:, 0]
+            else:
+                y = mlp_apply(lp["mlp"], hn, cfg.act, rt)
+            return (h + y, kp, vp), None
+
+        (x, kp, vp), _ = jax.lax.scan(
+            body, (x, state["k_pool"], state["v_pool"]),
+            (params["layers"], jnp.arange(L)))
+        state["k_pool"], state["v_pool"] = kp, vp
+    elif homog and kind0 == "ssm" and rt.get("scan_layers", True):
+        def body(carry, inp):
+            h, hp, cp = carry
+            lp, li = inp
+            hn = apply_norm(lp["attn_norm"], h, cfg.norm, cfg.norm_eps)
+            y, hs, cs = ssm_mod.ssm_decode(cfg, lp["ssm"], hn,
+                                           hp[li], cp[li])
+            hp = jax.lax.dynamic_update_index_in_dim(hp, hs, li, 0)
+            cp = jax.lax.dynamic_update_index_in_dim(cp, cs, li, 0)
+            return (h + y, hp, cp), None
+
+        (x, hp, cp), _ = jax.lax.scan(
+            body, (x, state["ssm_h"], state["ssm_conv"]),
+            (params["layers"], jnp.arange(L)))
+        state["ssm_h"], state["ssm_conv"] = hp, cp
+    else:
+        ai = ri = 0
+        for i in range(L):
+            kind = cfg.layer_kind(i)
+            if homog:
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+            elif kind == "recurrent":
+                lp = jax.tree.map(lambda a: a[ri], params["rec_layers"])
+            else:
+                lp = jax.tree.map(lambda a: a[ai], params["attn_layers"])
+            hn = apply_norm(lp["attn_norm"], x, cfg.norm, cfg.norm_eps)
+            if kind == "ssm":
+                y, hs, cs = ssm_mod.ssm_decode(cfg, lp["ssm"], hn,
+                                               state["ssm_h"][i],
+                                               state["ssm_conv"][i])
+                state["ssm_h"] = state["ssm_h"].at[i].set(hs)
+                state["ssm_conv"] = state["ssm_conv"].at[i].set(cs)
+                x = x + y
+                continue
+            if kind == "recurrent":
+                mix, hs, cs = ssm_mod.rglru_decode(cfg, lp["rec"], hn,
+                                                   state["lru_h"][ri],
+                                                   state["rec_conv"][ri])
+                state["lru_h"] = state["lru_h"].at[ri].set(hs)
+                state["rec_conv"] = state["rec_conv"].at[ri].set(cs)
+                ri += 1
+            else:
+                mix, kp, vp = attn_decode(
+                    cfg, lp["attn"], hn, ctx, kind=kind,
+                    k_pool=state["k_pool"], v_pool=state["v_pool"], layer=ai,
+                    block_table=state["block_table"], seq_lens=seq_lens, rt=rt)
+                state["k_pool"], state["v_pool"] = kp, vp
+                ai += 1
+            x = x + mix
+            hn = apply_norm(lp["mlp_norm"], x, cfg.norm, cfg.norm_eps)
+            if cfg.num_experts:
+                y = moe_apply(cfg, lp["moe"], hn[:, None, :], ctx, rt)[:, 0]
+            else:
+                y = mlp_apply(lp["mlp"], hn, cfg.act, rt)
+            x = x + y
+
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = unembed(x, params["embed"], params.get("head"))
+    return logits.astype(jnp.float32), state
+
+
+def prefill(cfg: ModelConfig, params: Params, state: Dict[str, jnp.ndarray],
+            batch: Dict[str, Any], ctx: Optional[ParallelCtx] = None,
+            rt: Optional[dict] = None
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Prompt prefill: fills caches, returns last-token logits [B, V].
+
+    batch: tokens [B, S] (right-padded), ctx_lens [B]. state["seq_lens"]
+    is set to ctx_lens.
+    """
+    rt = rt or {}
+    tokens, ctx_lens = batch["tokens"], batch["ctx_lens"]
+    B = tokens.shape[0]
+    x = _embed_inputs(cfg, params, batch, ctx, rt)
+    S = x.shape[1]
+    if S != tokens.shape[1]:               # vlm: vision prefix counts as context
+        ctx_lens = ctx_lens + (S - tokens.shape[1])
+    state = dict(state)
+    state["seq_lens"] = ctx_lens
+    mask = (jnp.arange(S)[None, :] < ctx_lens[:, None])
+
+    homog = _is_homogeneous(cfg)
+    kind0 = cfg.layer_kind(0)
+    if (rt.get("prefill_chunk") and homog and kind0 == "full"):
+        return _prefill_chunked(cfg, params, state, x, ctx_lens, ctx, rt)
+    if homog and rt.get("scan_layers", True) and kind0 != "recurrent":
+        if kind0 in ("full", "sliding"):
+            pf = attn_prefill_ring if kind0 == "sliding" else attn_prefill
+
+            def body(carry, inp):
+                h, kp, vp = carry
+                lp, li = inp
+                hn = apply_norm(lp["attn_norm"], h, cfg.norm, cfg.norm_eps)
+                mix, kp, vp = pf(cfg, lp["attn"], hn, ctx, kind=kind0,
+                                 k_pool=kp, v_pool=vp, layer=li,
+                                 block_table=state["block_table"],
+                                 ctx_lens=ctx_lens, rt=rt)
+                h = h + mix
+                hn = apply_norm(lp["mlp_norm"], h, cfg.norm, cfg.norm_eps)
+                if cfg.num_experts:
+                    y = moe_apply(cfg, lp["moe"], hn, ctx, rt)
+                else:
+                    y = mlp_apply(lp["mlp"], hn, cfg.act, rt)
+                return (h + y, kp, vp), None
+
+            body = jax.checkpoint(body, policy=rt.get("remat_policy"))
+            (x, kp, vp), _ = jax.lax.scan(
+                body, (x, state["k_pool"], state["v_pool"]),
+                (params["layers"], jnp.arange(cfg.num_layers)))
+            state["k_pool"], state["v_pool"] = kp, vp
+        else:                                    # ssm
+            def body(carry, inp):
+                h, hp, cp = carry
+                lp, li = inp
+                hn = apply_norm(lp["attn_norm"], h, cfg.norm, cfg.norm_eps)
+                y, hs, cs = ssm_mod.ssm_prefill(cfg, lp["ssm"], hn, mask,
+                                                ctx_lens, rt)
+                hp = jax.lax.dynamic_update_index_in_dim(hp, hs, li, 0)
+                cp = jax.lax.dynamic_update_index_in_dim(
+                    cp, cs.astype(cp.dtype), li, 0)
+                return (h + y, hp, cp), None
+
+            body = jax.checkpoint(body, policy=rt.get("remat_policy"))
+            (x, hp, cp), _ = jax.lax.scan(
+                body, (x, state["ssm_h"], state["ssm_conv"]),
+                (params["layers"], jnp.arange(cfg.num_layers)))
+            state["ssm_h"], state["ssm_conv"] = hp, cp
+        x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+        last = jnp.take_along_axis(x, (ctx_lens - 1)[:, None, None],
+                                   axis=1)[:, 0]
+        logits = unembed(last, params["embed"], params.get("head"))
+        return logits.astype(jnp.float32), state
+
+    ai = ri = 0
+    for i in range(cfg.num_layers):
+        kind = cfg.layer_kind(i)
+        if _is_homogeneous(cfg):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+        elif kind == "recurrent":
+            lp = jax.tree.map(lambda a: a[ri], params["rec_layers"])
+        else:
+            lp = jax.tree.map(lambda a: a[ai], params["attn_layers"])
+        hn = apply_norm(lp["attn_norm"], x, cfg.norm, cfg.norm_eps)
+        if kind == "ssm":
+            y, hs, cs = ssm_mod.ssm_prefill(cfg, lp["ssm"], hn, mask, ctx_lens, rt)
+            state["ssm_h"] = state["ssm_h"].at[i].set(hs)
+            state["ssm_conv"] = state["ssm_conv"].at[i].set(cs.astype(
+                state["ssm_conv"].dtype))
+            x = x + y
+            continue
+        if kind == "recurrent":
+            mix, hs, cs = ssm_mod.rglru_prefill(cfg, lp["rec"], hn, mask,
+                                                ctx_lens, rt)
+            state["lru_h"] = state["lru_h"].at[ri].set(hs)
+            state["rec_conv"] = state["rec_conv"].at[ri].set(cs.astype(
+                state["rec_conv"].dtype))
+            ri += 1
+        else:
+            if kind == "sliding":
+                # ring cache: prefill writes the last cache_len tokens
+                mix, kp, vp = attn_prefill_ring(
+                    cfg, lp["attn"], hn, ctx, kind=kind,
+                    k_pool=state["k_pool"], v_pool=state["v_pool"], layer=ai,
+                    block_table=state["block_table"], ctx_lens=ctx_lens, rt=rt)
+            else:
+                mix, kp, vp = attn_prefill(
+                    cfg, lp["attn"], hn, ctx, kind=kind,
+                    k_pool=state["k_pool"], v_pool=state["v_pool"], layer=ai,
+                    block_table=state["block_table"], ctx_lens=ctx_lens, rt=rt)
+            state["k_pool"], state["v_pool"] = kp, vp
+            ai += 1
+        x = x + mix
+        hn = apply_norm(lp["mlp_norm"], x, cfg.norm, cfg.norm_eps)
+        if cfg.num_experts:
+            y = moe_apply(cfg, lp["moe"], hn, ctx, rt)
+        else:
+            y = mlp_apply(lp["mlp"], hn, cfg.act, rt)
+        x = x + y
+
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    last = jnp.take_along_axis(x, (ctx_lens - 1)[:, None, None], axis=1)[:, 0]
+    logits = unembed(last, params["embed"], params.get("head"))
+    return logits.astype(jnp.float32), state
+
+
+def _prefill_chunked(cfg: ModelConfig, params: Params, state, x, ctx_lens,
+                     ctx, rt):
+    """Chunked prefill (beyond-paper, vLLM-style): the prompt is processed
+    in ``rt['prefill_chunk']``-token chunks; each chunk's attention reads
+    the already-cached prefix back from the paged pool, so activation
+    memory is O(chunk) instead of O(S). Full-attention homogeneous archs.
+    """
+    from repro.core.paged_cache import gather_kv, write_prefill_kv
+    from repro.models.attention import _qkv, _slopes
+    from repro.kernels import ops as kops
+    B, S, d = x.shape
+    c = min(rt["prefill_chunk"], S)
+    state = dict(state)
+    bt = state["block_table"]
+    slopes = _slopes(cfg)
+
+    B_ = x.shape[0]
+    use_island = (ctx is not None and ctx.dp_size > 1
+                  and B_ % ctx.dp_size == 0)
+
+    for off in range(0, S, c):
+        ce = min(off + c, S)
+        xc = x[:, off:ce]
+
+        def cache_attend(q, k, v, kp, vp, bt_l, cl_l, li, off=off, ce=ce):
+            """Per-dp-shard: write chunk K/V, gather cached prefix, attend.
+            Local block ids; collective-free (DESIGN.md §4)."""
+            kp = write_prefill_kv(kp, li, k, bt_l, cl_l, pos_offset=off)
+            vp = write_prefill_kv(vp, li, v, bt_l, cl_l, pos_offset=off)
+            bs = kp.shape[2]
+            ce_b = min(((ce + bs - 1) // bs) * bs, bt_l.shape[1] * bs)
+            kc = gather_kv(kp, li, bt_l, ce_b)[:, :ce].astype(q.dtype)
+            vc = gather_kv(vp, li, bt_l, ce_b)[:, :ce].astype(q.dtype)
+            if rt.get("skip_mixer_core"):
+                o = q * (1 + 1e-30 * (kc.sum() + vc.sum()))
+            else:
+                o = kops.flash_attention(
+                    q, kc, vc, slopes, causal=True, q_offset=off,
+                    use_pallas=rt.get("use_pallas"),
+                    interpret=rt.get("interpret"))
+            return o, kp, vp
+
+        def body(carry, inp, off=off, ce=ce):
+            h, kp, vp = carry
+            lp, li = inp
+            hn = apply_norm(lp["attn_norm"], h, cfg.norm, cfg.norm_eps)
+            q, k, v = _qkv(cfg, lp["attn"], hn,
+                           off + jnp.arange(ce - off), ctx, rt)
+            if use_island:
+                dp = ctx.dp_axes
+                o, kp, vp = jax.shard_map(
+                    cache_attend, mesh=ctx.mesh,
+                    in_specs=(P(dp), P(dp), P(dp), P(None, dp), P(None, dp),
+                              P(dp), P(dp), P()),
+                    out_specs=(P(dp), P(None, dp), P(None, dp)),
+                    axis_names=set(dp), check_vma=False,
+                )(q, k, v, kp, vp, bt, ctx_lens, li)
+            else:
+                o, kp, vp = cache_attend(q, k, v, kp, vp, bt, ctx_lens, li)
+            h = h + linear(o.reshape(*o.shape[:2], -1), lp["attn"]["wo"], rt)
+            hn = apply_norm(lp["mlp_norm"], h, cfg.norm, cfg.norm_eps)
+            if cfg.num_experts:
+                y = moe_apply(cfg, lp["moe"], hn, ctx, rt)
+            else:
+                y = mlp_apply(lp["mlp"], hn, cfg.act, rt)
+            return (h + y, kp, vp), None
+
+        body_r = jax.checkpoint(body, policy=rt.get("remat_policy"))
+        if rt.get("scan_layers", True):
+            (xc, kp, vp), _ = jax.lax.scan(
+                body_r, (xc, state["k_pool"], state["v_pool"]),
+                (params["layers"], jnp.arange(cfg.num_layers)))
+        else:                    # unrolled (dry-run cost extrapolation)
+            carry = (xc, state["k_pool"], state["v_pool"])
+            for li in range(cfg.num_layers):
+                lp = jax.tree.map(lambda a: a[li], params["layers"])
+                carry, _ = body_r(carry, (lp, jnp.int32(li)))
+            xc, kp, vp = carry
+        state["k_pool"], state["v_pool"] = kp, vp
+        x = x.at[:, off:ce].set(xc)        # final hidden states per chunk
+
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    last = jnp.take_along_axis(x, (ctx_lens - 1)[:, None, None], axis=1)[:, 0]
+    logits = unembed(last, params["embed"], params.get("head"))
+    return logits.astype(jnp.float32), state
+
+
+def attn_prefill_ring(cfg, p, x, ctx, *, kind, k_pool, v_pool, layer,
+                      block_table, ctx_lens, rt):
+    """Sliding-window prefill: compute flash-SWA attention, then write each
+    token's K/V at ring slot pos % cache_len (later tokens overwrite)."""
+    from repro.core.paged_cache import write_prefill_kv
+    from repro.models.attention import _qkv, _slopes
+    from repro.kernels import ops as kops
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q, k, v = _qkv(cfg, p, x, positions, ctx, rt)
+    o = kops.flash_attention(q, k, v, _slopes(cfg), causal=True,
+                             sliding_window=cfg.sliding_window,
+                             use_pallas=rt.get("use_pallas"),
+                             interpret=rt.get("interpret"))
+    cache_len = block_table.shape[1] * k_pool.shape[2]
+    # keep only the last cache_len tokens per sequence: token at position p
+    # lands at ring slot p % cache_len; older tokens in the same slot must
+    # be dropped, so mask tokens with p < ctx_len - cache_len.
+    keep = ((positions[None] >= ctx_lens[:, None] - cache_len)
+            & (positions[None] < ctx_lens[:, None]))
+    # token at position p lands at ring slot p % cache_len; the keep window
+    # spans at most cache_len positions, so slots are collision-free.
+    k_pool = _write_ring(k_pool, layer, k, block_table, positions, keep,
+                         cache_len)
+    v_pool = _write_ring(v_pool, layer, v, block_table, positions, keep,
+                         cache_len)
+    y = linear(o.reshape(B, S, -1), p["wo"], rt)
+    return y, k_pool, v_pool
+
+
+def _write_ring(pool, layer, k, block_table, positions, keep, cache_len):
+    B, S = k.shape[:2]
+    bs = pool.shape[2]
+    slot = positions % cache_len                              # [S]
+    blk = block_table[:, slot // bs]                          # [B, S]
+    off = slot % bs
+    NB, BS = pool.shape[1], pool.shape[2]
+    flat_idx = (blk * bs + off[None, :]).reshape(-1)
+    flat_idx = jnp.where(keep.reshape(-1), flat_idx, NB * BS)
+    lp = pool[layer].reshape(NB * BS, *pool.shape[3:])
+    lp = lp.at[flat_idx].set(k.reshape(B * S, *k.shape[2:]).astype(pool.dtype),
+                             mode="drop")
+    return pool.at[layer].set(lp.reshape(NB, BS, *pool.shape[3:]))

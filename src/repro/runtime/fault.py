@@ -1,0 +1,122 @@
+"""Fault tolerance: checkpoint/restart supervision, straggler mitigation,
+elastic re-meshing. The mechanisms are real (and unit-tested); the failure
+*signals* on a single-host CPU box are injected (see tests) — on a cluster
+they come from the coordinator's heartbeat service.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+log = logging.getLogger("repro.fault")
+
+
+@dataclass
+class StragglerDetector:
+    """EMA step-time monitor. A step slower than ``threshold``× the EMA is
+    flagged; after ``patience`` consecutive flags the runner is told to
+    re-slot (on TPU pods: evict + reschedule the slow host's shard)."""
+    threshold: float = 3.0
+    patience: int = 3
+    ema: Optional[float] = None
+    alpha: float = 0.1
+    _strikes: int = 0
+    events: List[Dict[str, float]] = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> str:
+        if self.ema is None:
+            self.ema = dt
+            return "ok"
+        verdict = "ok"
+        if dt > self.threshold * self.ema:
+            self._strikes += 1
+            self.events.append({"step": step, "dt": dt, "ema": self.ema})
+            verdict = "straggler" if self._strikes < self.patience \
+                else "reslot"
+            if verdict == "reslot":
+                self._strikes = 0
+        else:
+            self._strikes = 0
+            self.ema = (1 - self.alpha) * self.ema + self.alpha * dt
+        return verdict
+
+
+class PreemptionError(RuntimeError):
+    """Raised by the (injected or real) failure signal mid-training."""
+
+
+@dataclass
+class Supervisor:
+    """Checkpoint-restart training supervision.
+
+    ``run`` drives ``step_fn`` for ``total_steps``; any exception triggers a
+    restore from the latest checkpoint and a bounded number of retries —
+    the node-failure story. State is (params, opt_state, data_state).
+    """
+    checkpointer: Any                      # Checkpointer
+    save_every: int = 50
+    max_restarts: int = 3
+    straggler: StragglerDetector = field(default_factory=StragglerDetector)
+    restarts: int = 0
+    history: List[Dict[str, Any]] = field(default_factory=list)
+
+    def run(self, *, total_steps: int, state: Dict[str, Any],
+            step_fn: Callable[[int, Dict[str, Any]], Dict[str, Any]],
+            restore_fn: Callable[[int], Dict[str, Any]],
+            fail_hook: Optional[Callable[[int], None]] = None
+            ) -> Dict[str, Any]:
+        step = int(state.get("step", 0))
+        while step < total_steps:
+            try:
+                if fail_hook is not None:
+                    fail_hook(step)
+                t0 = time.perf_counter()
+                state = step_fn(step, state)
+                dt = time.perf_counter() - t0
+                verdict = self.straggler.observe(step, dt)
+                if verdict == "reslot":
+                    log.warning("straggler at step %d (%.3fs vs ema %.3fs): "
+                                "re-slotting", step, dt, self.straggler.ema)
+                step += 1
+                state["step"] = step
+                if step % self.save_every == 0 or step == total_steps:
+                    self.checkpointer.save(step, state["trees"],
+                                           extra=state.get("extra", {}))
+                    self.history.append({"event": "save", "step": step})
+            except Exception as e:          # node failure / preemption
+                self.restarts += 1
+                self.history.append({"event": "restart", "step": step,
+                                     "error": repr(e)})
+                if self.restarts > self.max_restarts:
+                    raise
+                last = self.checkpointer.latest_step()
+                log.warning("failure at step %d (%r); restoring step %s "
+                            "(restart %d/%d)", step, e, last, self.restarts,
+                            self.max_restarts)
+                if last is None:
+                    step = 0
+                    continue
+                state = restore_fn(last)
+                step = int(state["step"])
+        return state
+
+
+def elastic_remesh(trees: Dict[str, Any], make_shardings: Callable[[Any], Any],
+                   ) -> Dict[str, Any]:
+    """Re-place a (restored) state on the *current* device topology.
+
+    Checkpoints are topology-independent (plain arrays + logical sharding
+    rules), so elastic up/down-scaling is just device_put with shardings
+    recomputed for the new mesh.
+    """
+    out = {}
+    for name, tree in trees.items():
+        sh = make_shardings(tree)
+        out[name] = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else x,
+            tree, sh)
+    return out

@@ -1,0 +1,259 @@
+"""Continuous-batching serving engine (the vLLM role in the paper).
+
+Dynamic scheduling happens in Python; the *device step* is static-shape
+(padded slot arrays) so XLA never recompiles:
+
+* fixed ``max_slots`` decode slots; a slot holds one running sequence,
+* paged KV blocks come from the ref-counted ``BlockAllocator``
+  (prefix reuse + copy-on-write, paper §III.C "cache sharing and reuse"),
+* admission: prompts are prefilled (padded to a bucket length) when enough
+  free blocks exist (watermark), else queued; decode preempts nothing —
+  out-of-blocks preempts the *youngest* sequence back to the queue
+  (recompute-style preemption, like vLLM),
+* metrics match the paper's Fig. 2: latency, all-throughput (req/s,
+  tok/s), generation throughput (tok/s).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.paged_cache import BlockAllocator, OutOfBlocksError
+from repro.models import transformer as T
+from repro.serving.sampler import sample
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    arrival: float = 0.0
+    # filled by the engine
+    output: List[int] = field(default_factory=list)
+    first_token_t: Optional[float] = None
+    done_t: Optional[float] = None
+
+
+@dataclass
+class _Seq:
+    req: Request
+    slot: int
+    block_ids: List[int]
+    seq_len: int                      # tokens in cache (incl. last fed)
+    last_token: int
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
+                 num_blocks: int = 512, max_blocks_per_seq: int = 64,
+                 prefill_bucket: int = 64, rt: Optional[dict] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.mb = max_blocks_per_seq
+        self.prefill_bucket = prefill_bucket
+        self.rt = dict(rt or {})
+        self.alloc = BlockAllocator(
+            num_blocks, cfg.paging.block_size,
+            enable_prefix_reuse=cfg.paging.enable_prefix_reuse,
+            watermark_frac=cfg.paging.watermark_frac)
+        self.state = T.make_decode_state(cfg, max_slots, num_blocks, self.mb,
+                                         dtype=jnp.float32)
+        self.waiting: List[Request] = []
+        self.running: Dict[int, _Seq] = {}
+        self.finished: List[Request] = []
+        self.free_slots = list(range(max_slots - 1, -1, -1))
+        self.key = jax.random.PRNGKey(seed)
+        self.metrics: Dict[str, float] = {"prompt_tokens": 0,
+                                          "gen_tokens": 0, "preemptions": 0}
+        self._t0: Optional[float] = None
+
+        self._prefill = jax.jit(
+            lambda p, s, b: T.prefill(cfg, p, s, b, None, self.rt))
+        self._decode = jax.jit(
+            lambda p, s, t: T.decode_step(cfg, p, s, t, None, self.rt))
+
+    # ------------------------------------------------------------ intake
+    def add_request(self, req: Request) -> None:
+        req.arrival = time.perf_counter()
+        self.waiting.append(req)
+
+    # ------------------------------------------------------------ admission
+    def _bucket(self, n: int) -> int:
+        b = self.prefill_bucket
+        return min(((n + b - 1) // b) * b, self.mb * self.alloc.block_size)
+
+    def _try_admit(self) -> None:
+        admitted: List[_Seq] = []
+        while self.waiting and self.free_slots:
+            req = self.waiting[0]
+            need = (len(req.prompt) + self.alloc.block_size - 1) \
+                // self.alloc.block_size + 1
+            if not self.alloc.can_allocate(need):
+                break
+            self.waiting.pop(0)
+            block_ids, _reused = self.alloc.allocate_prompt(req.prompt)
+            slot = self.free_slots.pop()
+            seq = _Seq(req=req, slot=slot, block_ids=block_ids,
+                       seq_len=len(req.prompt), last_token=req.prompt[-1])
+            self.running[slot] = seq
+            admitted.append(seq)
+        if admitted:
+            self._run_prefill(admitted)
+
+    def _run_prefill(self, seqs: List[_Seq]) -> None:
+        bs = self.alloc.block_size
+        maxlen = self._bucket(max(s.seq_len for s in seqs))
+        B = len(seqs)
+        toks = np.zeros((B, maxlen), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, s in enumerate(seqs):
+            toks[i, :s.seq_len] = s.req.prompt
+            lens[i] = s.seq_len
+        # temporary contiguous state for the prefill batch, then scatter
+        # into the live engine state at each sequence's slot/table.
+        sub = dict(self.state)
+        bt = np.zeros((B, self.mb), np.int32)
+        for i, s in enumerate(seqs):
+            bt[i, :len(s.block_ids)] = s.block_ids
+        sub["block_table"] = jnp.asarray(bt) if "block_table" in sub else None
+        sub = {k: v for k, v in sub.items() if v is not None}
+        # prefill writes pools in-place via the shared pool arrays: pools are
+        # engine-global, per-slot state rows are gathered/scattered below.
+        per_seq = {}
+        for k in ("ssm_h", "ssm_conv", "lru_h", "rec_conv"):
+            if k in sub:
+                per_seq[k] = sub[k][:, [s.slot for s in seqs]]
+                sub[k] = per_seq[k]
+        sub["seq_lens"] = jnp.asarray(lens)
+        batch = {"tokens": jnp.asarray(toks), "ctx_lens": jnp.asarray(lens)}
+        logits, sub = self._prefill(self.params, sub, batch)
+        # scatter updated state back
+        for k in ("k_pool", "v_pool"):
+            if k in sub:
+                self.state[k] = sub[k]
+        for k in per_seq:
+            self.state[k] = self.state[k].at[:, [s.slot for s in seqs]].set(
+                sub[k])
+        self.metrics["prompt_tokens"] += int(lens.sum())
+        # first sampled token
+        self.key, sk = jax.random.split(self.key)
+        nxt = sample(logits, sk, [s.req.temperature for s in seqs])
+        now = time.perf_counter()
+        for i, s in enumerate(seqs):
+            tok = int(nxt[i])
+            s.req.output.append(tok)
+            s.req.first_token_t = now
+            s.last_token = tok
+            s.seq_len += 1
+            self.metrics["gen_tokens"] += 1
+            self._maybe_finish(s)
+
+    # ------------------------------------------------------------ decode
+    def _sync_tables(self) -> None:
+        bt = np.zeros((self.max_slots, self.mb), np.int32)
+        sl = np.zeros((self.max_slots,), np.int32)
+        for slot, s in self.running.items():
+            bt[slot, :len(s.block_ids)] = s.block_ids
+            sl[slot] = s.seq_len
+        if "block_table" in self.state:
+            self.state["block_table"] = jnp.asarray(bt)
+        self.state["seq_lens"] = jnp.asarray(sl)
+
+    def _grow_blocks(self, s: _Seq) -> None:
+        bs = self.alloc.block_size
+        pos = s.seq_len - 1                      # position the new token writes
+        if self.cfg.sliding_window and not any(
+                self.cfg.layer_kind(i) == "full"
+                for i in range(self.cfg.num_layers)):
+            return                               # ring cache: fixed blocks
+        s.block_ids, _cow = self.alloc.append_slot(s.block_ids, pos)
+
+    def step(self) -> None:
+        """One engine iteration: admit, then one decode for all running."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        self._try_admit()
+        if not self.running:
+            return
+        # grow block tables (may preempt on OOM)
+        for slot in sorted(self.running):
+            s = self.running[slot]
+            try:
+                self._grow_blocks(s)
+            except OutOfBlocksError:
+                self._preempt_youngest()
+        self._sync_tables()
+        toks = np.zeros((self.max_slots,), np.int32)
+        for slot, s in self.running.items():
+            toks[slot] = s.last_token
+        logits, self.state = self._decode(self.params, self.state,
+                                          jnp.asarray(toks))
+        self.key, sk = jax.random.split(self.key)
+        temps = [self.running[s].req.temperature if s in self.running else 0.0
+                 for s in range(self.max_slots)]
+        nxt = sample(logits, sk, temps)
+        now = time.perf_counter()
+        for slot in list(self.running):
+            s = self.running[slot]
+            tok = int(nxt[slot])
+            s.req.output.append(tok)
+            s.last_token = tok
+            s.seq_len += 1
+            self.metrics["gen_tokens"] += 1
+            self._maybe_finish(s)
+
+    def _maybe_finish(self, s: _Seq) -> None:
+        if len(s.req.output) >= s.req.max_new_tokens:
+            s.req.done_t = time.perf_counter()
+            self.finished.append(s.req)
+            self.alloc.free_sequence(s.block_ids)
+            del self.running[s.slot]
+            self.free_slots.append(s.slot)
+
+    def _preempt_youngest(self) -> None:
+        slot = max(self.running,
+                   key=lambda sl: self.running[sl].req.arrival)
+        s = self.running.pop(slot)
+        self.alloc.free_sequence(s.block_ids)
+        self.free_slots.append(slot)
+        self.metrics["preemptions"] += 1
+        # recompute-style preemption: requeue with prompt+generated prefix
+        s.req.prompt = list(s.req.prompt) + list(s.req.output)
+        self.waiting.insert(0, s.req)
+
+    # ------------------------------------------------------------ drive
+    def run_until_done(self, max_steps: int = 10000) -> Dict[str, float]:
+        steps = 0
+        while (self.waiting or self.running) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.report()
+
+    def report(self) -> Dict[str, float]:
+        """The paper's three numbers."""
+        t1 = time.perf_counter()
+        wall = max(t1 - (self._t0 or t1), 1e-9)
+        n = len(self.finished)
+        lat = float(np.mean([r.done_t - r.arrival for r in self.finished])) \
+            if n else float("nan")
+        total_toks = self.metrics["prompt_tokens"] + self.metrics["gen_tokens"]
+        return {
+            "latency_s": lat,
+            "throughput_req_s": n / wall,
+            "throughput_tok_s": total_toks / wall,
+            "generate_tok_s": self.metrics["gen_tokens"] / wall,
+            "preemptions": self.metrics["preemptions"],
+            "block_utilization": self.alloc.utilization(),
+            "blocks_reused": self.alloc.stats["reused"],
+            "wall_s": wall,
+        }

@@ -1,0 +1,21 @@
+"""Token sampling: greedy / temperature / top-k."""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sample(logits: jnp.ndarray, key, temperatures: Sequence[float],
+           top_k: int = 0) -> np.ndarray:
+    """logits: [B, V]; per-sequence temperature (0 => greedy)."""
+    t = jnp.asarray(list(temperatures), jnp.float32)[:, None]
+    greedy = jnp.argmax(logits, axis=-1)
+    scaled = logits / jnp.maximum(t, 1e-6)
+    if top_k > 0:
+        kth = jax.lax.top_k(scaled, top_k)[0][:, -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    sampled = jax.random.categorical(key, scaled, axis=-1)
+    return np.asarray(jnp.where(t[:, 0] <= 0.0, greedy, sampled))

@@ -1,0 +1,79 @@
+"""Opt-GQA core semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.alibi import alibi_bias, alibi_slopes
+from repro.core.gqa import (decode_attention, grouped_attention,
+                            grouped_attention_chunked, mha_attention)
+
+
+def _qkv(key, B, S, H, KV, D):
+    ks = jax.random.split(key, 3)
+    return (jax.random.normal(ks[0], (B, S, H, D)),
+            jax.random.normal(ks[1], (B, S, KV, D)),
+            jax.random.normal(ks[2], (B, S, KV, D)))
+
+
+def test_gqa_equals_mha_with_repeated_kv():
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, 16, 8, 2, 16)
+    o1 = grouped_attention(q, k, v)
+    o2 = mha_attention(q, jnp.repeat(k, 4, 2), jnp.repeat(v, 4, 2))
+    np.testing.assert_allclose(o1, o2, atol=1e-5)
+
+
+def test_causality():
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 12, 4, 4, 8)
+    o1 = grouped_attention(q, k, v, causal=True)
+    k2 = k.at[:, 7:].set(99.0)     # future keys must not matter for pos<7
+    v2 = v.at[:, 7:].set(-99.0)
+    o2 = grouped_attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(o1[:, :7], o2[:, :7], atol=1e-5)
+
+
+def test_sliding_window_blinds_far_past():
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 32, 4, 2, 8)
+    o1 = grouped_attention(q, k, v, sliding_window=4)
+    k2 = k.at[:, :16].set(7.0)     # beyond window for positions >= 20
+    v2 = v.at[:, :16].set(-7.0)
+    o2 = grouped_attention(q, k2, v2, sliding_window=4)
+    np.testing.assert_allclose(o1[:, 24:], o2[:, 24:], atol=1e-5)
+
+
+def test_softmax_rows_normalized_uniform_v():
+    # with all values equal, output must equal that value (weights sum to 1)
+    q, k, _ = _qkv(jax.random.PRNGKey(3), 2, 8, 4, 2, 8)
+    v = jnp.ones((2, 8, 2, 8)) * 3.0
+    o = grouped_attention(q, k, v)
+    np.testing.assert_allclose(o, jnp.full_like(o, 3.0), rtol=1e-5)
+
+
+def test_alibi_slopes_power_of_two_and_not():
+    s8 = alibi_slopes(8)
+    assert s8.shape == (8,) and float(s8[0]) == pytest.approx(2 ** -1)
+    s12 = alibi_slopes(12)
+    assert s12.shape == (12,) and bool(jnp.all(s12 > 0))
+
+
+def test_alibi_bias_never_materializes_positive():
+    b = alibi_bias(alibi_slopes(4), jnp.arange(6), jnp.arange(6))
+    assert float(b.max()) <= 0.0
+    assert b.shape == (4, 6, 6)
+
+
+def test_chunked_matches_exact():
+    q, k, v = _qkv(jax.random.PRNGKey(4), 1, 700, 4, 2, 16)
+    sl = alibi_slopes(4)
+    a = grouped_attention(q, k, v, causal=True, alibi_slopes=sl)
+    b = grouped_attention_chunked(q, k, v, causal=True, alibi_slopes=sl,
+                                  block_q=256)
+    np.testing.assert_allclose(a, b, atol=2e-5)
+
+
+def test_decode_matches_full_last_position():
+    B, S, H, KV, D = 2, 10, 4, 2, 8
+    q, k, v = _qkv(jax.random.PRNGKey(5), B, S, H, KV, D)
+    full = grouped_attention(q, k, v, causal=True)
+    o = decode_attention(q[:, -1], k, v, jnp.full((B,), S, jnp.int32))
+    np.testing.assert_allclose(o, full[:, -1], atol=1e-5)

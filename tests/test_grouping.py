@@ -1,0 +1,56 @@
+"""Dynamic grouping / MHA->GQA conversion (paper's Opt-GQA recipe)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grouping import (cluster_heads, convert_mha_to_gqa,
+                                 grouping_quality, head_similarity)
+
+
+def _clustered_acts(H=8, N=64, D=16, groups=2, noise=0.05, seed=0):
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(size=(groups, D))
+    acts, truth = [], []
+    for h in range(H):
+        g = h % groups
+        truth.append(g)
+        acts.append(protos[g] + noise * rng.normal(size=(N, D)))
+    return jnp.asarray(np.stack(acts)), truth
+
+
+def test_similarity_clusters_recover_truth():
+    acts, truth = _clustered_acts()
+    sim = head_similarity(acts)
+    groups = cluster_heads(sim, 2)
+    for g in groups:
+        assert len({truth[h] for h in g}) == 1   # pure clusters
+    intra, inter = grouping_quality(sim, groups)
+    assert intra > inter
+
+
+def test_cluster_sizes_equal():
+    acts, _ = _clustered_acts(H=12, groups=3)
+    groups = cluster_heads(head_similarity(acts), 4)
+    assert sorted(len(g) for g in groups) == [3, 3, 3, 3]
+
+
+def test_conversion_shapes_and_perm():
+    H, D, d = 8, 16, 32
+    key = jax.random.PRNGKey(0)
+    wq, wk, wv = (jax.random.normal(k, (d, H, D)) for k in jax.random.split(key, 3))
+    acts, _ = _clustered_acts(H=H, D=D)
+    conv = convert_mha_to_gqa(wq, wk, wv, acts, num_kv_heads=2)
+    assert conv.wk.shape == (d, 2, D) and conv.wv.shape == (d, 2, D)
+    assert sorted(conv.q_perm.tolist()) == list(range(H))
+    assert conv.intra_sim > conv.inter_sim
+
+
+def test_identical_heads_merge_losslessly():
+    """If all heads in a group share identical K weights, merging is exact."""
+    H, D, d = 4, 8, 16
+    key = jax.random.PRNGKey(1)
+    wk1 = jax.random.normal(key, (d, 1, D))
+    wk = jnp.concatenate([wk1, wk1, wk1, wk1], axis=1)
+    acts = jnp.tile(jax.random.normal(key, (1, 32, D)), (H, 1, 1))
+    conv = convert_mha_to_gqa(wk, wk, wk, acts, num_kv_heads=1)
+    np.testing.assert_allclose(conv.wk[:, 0], wk1[:, 0], rtol=1e-5)

@@ -1,0 +1,89 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import QuantConfig
+from repro.core.alibi import alibi_slopes
+from repro.core.gptq import gptq_quantize
+from repro.core.quant import make_quant_params
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gptq_matmul import gptq_matmul
+from repro.kernels.paged_attention import paged_attention
+
+TOL = {jnp.float32: 5e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("B,S,H,KV,D", [
+    (2, 64, 8, 2, 32), (1, 96, 4, 4, 16), (2, 128, 12, 2, 64),
+    (1, 64, 16, 1, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("alibi,win", [(False, 0), (True, 0), (True, 24)])
+def test_flash_attention_sweep(B, S, H, KV, D, dtype, alibi, win):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, D), dtype)
+    sl = alibi_slopes(H) if alibi else None
+    o = flash_attention(q, k, v, sl, causal=True, sliding_window=win,
+                        block_q=32, block_k=32, interpret=True)
+    r = ref.flash_attention_ref(q, k, v, causal=True, sliding_window=win,
+                                alibi_slopes=sl)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=TOL[dtype])
+
+
+@pytest.mark.parametrize("B,H,KV,D,BS,MB", [
+    (3, 8, 2, 32, 8, 4), (2, 4, 4, 16, 16, 3), (2, 12, 2, 64, 8, 6),
+    (1, 8, 1, 128, 16, 2),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_sweep(B, H, KV, D, BS, MB, dtype):
+    NB = B * MB + 2
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    kp = jax.random.normal(ks[1], (NB, BS, KV, D), dtype)
+    vp = jax.random.normal(ks[2], (NB, BS, KV, D), dtype)
+    bt = jax.random.permutation(ks[3], NB)[:B * MB].reshape(B, MB)
+    bt = bt.astype(jnp.int32)
+    sl = jnp.asarray(np.random.default_rng(0).integers(1, MB * BS + 1, B),
+                     jnp.int32)
+    o = paged_attention(q, kp, vp, bt, sl, interpret=True)
+    r = ref.paged_attention_ref(q, kp, vp, bt, sl)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=TOL[dtype])
+
+
+def test_paged_attention_alibi_and_window():
+    B, H, KV, D, BS, MB = 2, 8, 2, 32, 8, 5
+    NB = B * MB
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kp = jax.random.normal(ks[1], (NB, BS, KV, D))
+    vp = jax.random.normal(ks[2], (NB, BS, KV, D))
+    bt = jnp.arange(NB, dtype=jnp.int32).reshape(B, MB)
+    sl = jnp.array([37, 12], jnp.int32)
+    slo = alibi_slopes(H)
+    o = paged_attention(q, kp, vp, bt, sl, slo, sliding_window=16,
+                        interpret=True)
+    r = ref.paged_attention_ref(q, kp, vp, bt, sl, alibi_slopes=slo,
+                                sliding_window=16)
+    np.testing.assert_allclose(o, r, atol=5e-5)
+
+
+@pytest.mark.parametrize("M,K,N,gs", [(16, 64, 32, 32), (8, 128, 48, 128),
+                                      (32, 256, 128, 64), (5, 64, 17, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gptq_matmul_sweep(rng, M, K, N, gs, dtype):
+    w = rng.normal(size=(K, N))
+    qt = gptq_quantize(w, None, QuantConfig(group_size=gs, act_order=False))
+    p = make_quant_params(qt)
+    x = jnp.asarray(rng.normal(size=(M, K)), dtype)
+    y = gptq_matmul(x, p["qweight"], p["scales"], p["zeros"], interpret=True)
+    r = ref.quant_matmul_ref(x, p)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(r, np.float32),
+                               rtol=2e-2, atol=TOL[dtype] * np.abs(np.asarray(r)).max())

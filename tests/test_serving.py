@@ -1,0 +1,76 @@
+"""Continuous-batching engine end-to-end on a tiny model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_reduced
+from repro.models import transformer as T
+from repro.serving.engine import Request, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = get_reduced("qwen2-1.5b", num_layers=2)
+    params = T.init_params(cfg, KEY)
+    return cfg, params
+
+
+def _prompts(n, rng, prefix_len=0):
+    prefix = list(rng.integers(1, 200, prefix_len)) if prefix_len else []
+    return [prefix + list(rng.integers(1, 200, int(rng.integers(3, 15))))
+            for _ in range(n)]
+
+
+def test_engine_completes_all(small):
+    cfg, params = small
+    eng = ServingEngine(cfg, params, max_slots=4, num_blocks=128,
+                        max_blocks_per_seq=8, prefill_bucket=16)
+    rng = np.random.default_rng(0)
+    for i, p in enumerate(_prompts(9, rng)):
+        eng.add_request(Request(rid=i, prompt=p, max_new_tokens=6))
+    rep = eng.run_until_done()
+    assert len(eng.finished) == 9
+    assert all(len(r.output) == 6 for r in eng.finished)
+    assert rep["generate_tok_s"] > 0
+
+
+def test_engine_greedy_matches_model(small):
+    """Engine (paged, batched) greedy decode == direct model argmax."""
+    cfg, params = small
+    eng = ServingEngine(cfg, params, max_slots=2, num_blocks=64,
+                        max_blocks_per_seq=8, prefill_bucket=8)
+    prompt = [5, 9, 13, 2, 7]
+    eng.add_request(Request(rid=0, prompt=prompt, max_new_tokens=4))
+    eng.run_until_done()
+    got = eng.finished[0].output
+    toks = list(prompt)
+    for _ in range(4):
+        logits = T.forward(cfg, params, {"tokens": jnp.asarray([toks])})
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    assert got == toks[len(prompt):]
+
+
+def test_prefix_reuse_across_requests(small):
+    cfg, params = small
+    eng = ServingEngine(cfg, params, max_slots=4, num_blocks=128,
+                        max_blocks_per_seq=8, prefill_bucket=32)
+    rng = np.random.default_rng(1)
+    for i, p in enumerate(_prompts(6, rng, prefix_len=16)):
+        eng.add_request(Request(rid=i, prompt=p, max_new_tokens=3))
+    eng.run_until_done()
+    assert eng.alloc.stats["reused"] > 0
+
+
+def test_block_exhaustion_queues_requests(small):
+    cfg, params = small
+    eng = ServingEngine(cfg, params, max_slots=4, num_blocks=12,
+                        max_blocks_per_seq=6, prefill_bucket=16)
+    rng = np.random.default_rng(2)
+    for i, p in enumerate(_prompts(8, rng)):
+        eng.add_request(Request(rid=i, prompt=p, max_new_tokens=4))
+    eng.run_until_done(max_steps=500)
+    assert len(eng.finished) == 8          # everyone eventually served
+    assert eng.alloc.num_free >= 0
