@@ -3,8 +3,19 @@
 Small same-shape models on CPU: 'mha' (kv=H, contiguous-style oversized
 blocks, no reuse) vs 'opt-gqa' (kv=H/4, paged, prefix reuse, ALiBi-ready).
 Reported: latency, all-throughput (req/s, tok/s), generate throughput —
-exactly the paper's three numbers (ratios are the transferable signal)."""
+exactly the paper's three numbers (ratios are the transferable signal).
+
+``table_fastpath`` quantifies the fused decode megastep against the legacy
+per-token loop on the same workload: per-engine-step decode latency,
+host↔device syncs per decode step, and generate throughput. Run as a
+module for smoke mode + JSON trajectory tracking::
+
+    PYTHONPATH=src python -m benchmarks.bench_serving --smoke \
+        --json BENCH_serving.json
+"""
 from __future__ import annotations
+
+import argparse
 
 import jax
 import numpy as np
@@ -15,20 +26,22 @@ from repro.models import transformer as T
 from repro.serving.engine import Request, ServingEngine
 
 
-def _run_engine(cfg, params, seed=0):
+def _run_engine(cfg, params, seed=0, *, n_requests=12, max_new_tokens=8,
+                use_fused=True, max_horizon=8):
     eng = ServingEngine(cfg, params, max_slots=4, num_blocks=256,
-                        max_blocks_per_seq=16, prefill_bucket=32)
+                        max_blocks_per_seq=16, prefill_bucket=32,
+                        use_fused=use_fused, max_horizon=max_horizon)
     rng = np.random.default_rng(seed)
     prefix = list(rng.integers(1, 200, 24))
-    for i in range(12):
+    for i in range(n_requests):
         eng.add_request(Request(
             rid=i, prompt=prefix + list(rng.integers(1, 200,
                                                      int(rng.integers(4, 24)))),
-            max_new_tokens=8))
+            max_new_tokens=max_new_tokens))
     return eng.run_until_done()
 
 
-def table_fig2() -> None:
+def table_fig2(smoke: bool = False) -> None:
     key = jax.random.PRNGKey(0)
     for name, kv in (("mha", 8), ("opt-gqa", 2)):
         cfg = get_reduced("qwen1.5-0.5b", num_layers=4, num_heads=8,
@@ -37,7 +50,7 @@ def table_fig2() -> None:
             cfg = cfg.replace(paging=cfg.paging.__class__(
                 block_size=16, enable_prefix_reuse=False))
         params = T.init_params(cfg, key)
-        r = _run_engine(cfg, params)
+        r = _run_engine(cfg, params, n_requests=4 if smoke else 12)
         emit(f"fig2_{name}", r["latency_s"] * 1e6,
              f"req_s={r['throughput_req_s']:.3f};"
              f"tok_s={r['throughput_tok_s']:.1f};"
@@ -45,14 +58,15 @@ def table_fig2() -> None:
              f"reused={r['blocks_reused']}")
 
 
-def table_fig3() -> None:
+def table_fig3(smoke: bool = False) -> None:
     key = jax.random.PRNGKey(0)
     cfg = get_reduced("qwen1.5-0.5b", num_layers=4, num_heads=8,
                       num_kv_heads=2)
     params = T.init_params(cfg, key)
     gen = []
-    for run_i in range(3):
-        r = _run_engine(cfg, params, seed=run_i)
+    for run_i in range(2 if smoke else 3):
+        r = _run_engine(cfg, params, seed=run_i,
+                        n_requests=4 if smoke else 12)
         gen.append(r["generate_tok_s"])
         emit(f"fig3_run{run_i}", r["latency_s"] * 1e6,
              f"tok_s={r['throughput_tok_s']:.1f};"
@@ -61,6 +75,52 @@ def table_fig3() -> None:
          f"gen_mean={np.mean(gen):.1f};gen_cv={np.std(gen)/np.mean(gen):.3f}")
 
 
-def run() -> None:
-    table_fig2()
-    table_fig3()
+def table_fastpath(smoke: bool = False) -> None:
+    """Decode fast path: legacy per-token loop vs fused megastep on the
+    same workload. The win shows up as fewer host syncs per decode step
+    (1.0 -> ~1/horizon) and lower per-step decode latency."""
+    key = jax.random.PRNGKey(0)
+    cfg = get_reduced("qwen1.5-0.5b", num_layers=4, num_heads=8,
+                      num_kv_heads=2)
+    params = T.init_params(cfg, key)
+    # smoke keeps CI fast (horizon 4 still guarantees >= 2 fused dispatches,
+    # so per-step latency is warm / post-compile); the full run is long
+    # enough that the one-off megastep compile also amortizes in gen_tok_s.
+    n_req = 4 if smoke else 12
+    mnt = 12 if smoke else 64
+    horizon = 4 if smoke else 8
+    for name, fused in (("legacy", False), ("fused", True)):
+        r = _run_engine(cfg, params, n_requests=n_req, max_new_tokens=mnt,
+                        use_fused=fused, max_horizon=horizon)
+        emit(f"fastpath_{name}", r["decode_step_latency_us"],
+             f"gen_tok_s={r['generate_tok_s']:.1f};"
+             f"syncs_per_step={r['syncs_per_decode_step']:.3f};"
+             f"decode_steps={r['decode_steps']};"
+             f"dispatches={r['decode_dispatches']};"
+             f"host_syncs={r['host_syncs']}")
+
+
+def run(smoke: bool = False) -> None:
+    table_fig2(smoke)
+    table_fig3(smoke)
+    table_fastpath(smoke)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced request counts (CI)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (e.g. BENCH_serving.json)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+    if args.json:
+        from benchmarks.common import ROWS
+        from benchmarks.report import write_bench_json
+        write_bench_json(ROWS, args.json, smoke=args.smoke)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

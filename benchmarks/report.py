@@ -1,5 +1,6 @@
 """Render EXPERIMENTS.md §Dry-run / §Roofline tables from
-experiments/dryrun/*.json.
+experiments/dryrun/*.json, plus the benchmark-row JSON emitter used by CI
+to track the serving perf trajectory (BENCH_serving.json).
 
     PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
 """
@@ -9,6 +10,7 @@ import argparse
 import glob
 import json
 import os
+import platform
 from typing import Dict, List
 
 
@@ -84,6 +86,38 @@ def hint(r: Dict) -> str:
     if b == "memory":
         return "fewer f32 intermediates (bf16 norms/rope), larger fused regions"
     return "near roofline: tile/layout tuning only"
+
+
+def write_bench_json(rows: List[str], path: str, **meta) -> None:
+    """Persist ``name,us_per_call,derived`` CSV rows as structured JSON.
+
+    Each row becomes {"name", "us_per_call", derived keys...}; ``meta``
+    (e.g. smoke=True) is stored alongside so trajectories stay comparable
+    across CI runs.
+    """
+    out: Dict = {"meta": {"backend": _backend(), "python":
+                          platform.python_version(), **meta},
+                 "rows": []}
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        entry: Dict = {"name": name, "us_per_call": float(us)}
+        for kv in filter(None, derived.split(";")):
+            k, _, v = kv.partition("=")
+            try:
+                entry[k] = float(v)
+            except ValueError:
+                entry[k] = v
+        out["rows"].append(entry)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+
+
+def _backend() -> str:
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:
+        return "unknown"
 
 
 def main() -> None:

@@ -15,6 +15,7 @@ Two halves, mirroring vLLM on TPU:
 """
 from __future__ import annotations
 
+import functools
 import hashlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -91,6 +92,17 @@ class BlockAllocator:
         for b in block_ids:
             self.free(b)
 
+    def fork_sequence(self, block_ids: Sequence[int]) -> List[int]:
+        """Share a sequence's blocks with a fork (parallel sampling / beam
+        candidates): every block's refcount is bumped, including a partial
+        tail — the first divergent append on either fork triggers
+        copy-on-write (``grow`` returns the source block for the device
+        block-copy)."""
+        for b in block_ids:
+            assert self._blocks[b].ref > 0, f"fork of freed block {b}"
+            self._blocks[b].ref += 1
+        return list(block_ids)
+
     # -- prefix-aware prompt allocation ----------------------------------
     @staticmethod
     def _hash_prefix(tokens: Sequence[int]) -> bytes:
@@ -131,18 +143,59 @@ class BlockAllocator:
         (ref > 1) it is copy-on-write'd; copied_from is the old block id the
         device must copy data out of, else None.
         """
-        copied_from = None
-        if seq_len % self.block_size == 0:
-            block_ids = block_ids + [self._alloc_raw()]
+        block_ids, cow = self.grow(block_ids, seq_len, 1)
+        return block_ids, (cow[0] if cow else None)
+
+    def _tail_needs_cow(self, block_ids: Sequence[int],
+                        start_pos: int) -> bool:
+        """A write at start_pos lands in the current tail block and that
+        tail is shared — the single predicate both ``blocks_needed`` and
+        ``grow`` must agree on (the fused planner budgets with the former
+        and relies on the latter not raising)."""
+        return bool(start_pos % self.block_size and block_ids
+                    and self._blocks[block_ids[-1]].ref > 1)
+
+    def blocks_needed(self, block_ids: Sequence[int], start_pos: int,
+                      num_tokens: int) -> int:
+        """New blocks ``grow`` would consume for writes at positions
+        [start_pos, start_pos + num_tokens), including a CoW replacement."""
+        end = start_pos + num_tokens
+        n = max(0, -(-end // self.block_size) - len(block_ids))
+        if self._tail_needs_cow(block_ids, start_pos):
+            n += 1                                   # CoW'd tail is a new block
+        return n
+
+    def grow(self, block_ids: List[int], start_pos: int,
+             num_tokens: int = 1
+             ) -> Tuple[List[int], Optional[Tuple[int, int]]]:
+        """Ensure capacity for ``num_tokens`` writes starting at start_pos.
+
+        Bulk form of ``append_slot`` for the fused decode horizon: allocates
+        every block the horizon will touch in one host pass. Returns
+        (block_ids, cow): cow is a (src_block, dst_block) pair the device
+        must copy (shared tail copy-on-write), else None. Only the current
+        tail can need CoW: blocks past it are freshly allocated and private.
+
+        Atomic: capacity is checked up front, so a raise leaves both the
+        allocator and the caller's block list untouched.
+        """
+        if self.blocks_needed(block_ids, start_pos, num_tokens) \
+                > self.num_free:
+            raise OutOfBlocksError("KV block pool exhausted")
+        cow = None
+        if self._tail_needs_cow(block_ids, start_pos):
+            tail = block_ids[-1]                    # CoW: shared full-prefix tail
+            nb = self._alloc_raw()
+            self.free(tail)
+            block_ids = block_ids[:-1] + [nb]
+            cow = (tail, nb)
+            self.stats["cow"] += 1
         else:
-            tail = block_ids[-1]
-            if self._blocks[tail].ref > 1:          # CoW: shared full-prefix tail
-                nb = self._alloc_raw()
-                self.free(tail)
-                block_ids = block_ids[:-1] + [nb]
-                copied_from = tail
-                self.stats["cow"] += 1
-        return block_ids, copied_from
+            block_ids = list(block_ids)
+        end = start_pos + num_tokens
+        while len(block_ids) * self.block_size < end:
+            block_ids.append(self._alloc_raw())
+        return block_ids, cow
 
     def utilization(self) -> float:
         return 1.0 - self.num_free / self.num_blocks
@@ -165,12 +218,18 @@ def write_decode_kv(pool: jnp.ndarray, layer: int, k_new: jnp.ndarray,
     """Scatter one token's K (or V) per sequence into the paged pool.
 
     pool: [L, NB, BS, KV, D]; k_new: [B, KV, D]; block_table: [B, MB];
-    positions: [B] absolute position of the new token.
+    positions: [B] absolute position of the new token. Negative positions
+    (inactive decode slots, seq_len == 0) are dropped instead of wrapping
+    around and corrupting a live block.
     """
     bs = pool.shape[2]
-    blk = jnp.take_along_axis(block_table, (positions // bs)[:, None], axis=1)[:, 0]
-    off = positions % bs
-    return pool.at[layer, blk, off].set(k_new.astype(pool.dtype))
+    valid = positions >= 0
+    pos = jnp.maximum(positions, 0)
+    blk = jnp.take_along_axis(block_table, (pos // bs)[:, None], axis=1)[:, 0]
+    blk = jnp.where(valid, blk, pool.shape[1])                 # OOB -> dropped
+    off = pos % bs
+    return pool.at[layer, blk, off].set(k_new.astype(pool.dtype),
+                                        mode="drop")
 
 
 def write_prefill_kv(pool: jnp.ndarray, layer: int, k: jnp.ndarray,
@@ -204,12 +263,28 @@ def write_prefill_kv(pool: jnp.ndarray, layer: int, k: jnp.ndarray,
 
 def gather_kv(pool: jnp.ndarray, layer: int, block_table: jnp.ndarray,
               max_len: int) -> jnp.ndarray:
-    """Gather a contiguous [B, max_len, KV, D] view (reference path only)."""
+    """Gather a contiguous [B, max_len, KV, D] view (reference path only).
+
+    ``max_len`` need not be a block multiple: the tail partial block is
+    gathered too and the result sliced back to exactly max_len rows.
+    """
     bs = pool.shape[2]
-    nb = max_len // bs
+    nb = -(-max_len // bs)                                 # ceil: keep the tail
     blk = block_table[:, :nb]                              # [B, nb]
     g = pool[layer][blk]                                   # [B, nb, bs, KV, D]
-    return g.reshape(blk.shape[0], nb * bs, *pool.shape[3:])
+    return g.reshape(blk.shape[0], nb * bs, *pool.shape[3:])[:, :max_len]
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def copy_blocks(pool: jnp.ndarray, src: jnp.ndarray,
+                dst: jnp.ndarray) -> jnp.ndarray:
+    """Device-side block copy for the allocator's copy-on-write path.
+
+    pool: [L, NB, BS, KV, D]; src/dst: [n] int32 physical block ids. Copies
+    pool[:, src[i]] -> pool[:, dst[i]] for every layer without the contents
+    ever round-tripping through host numpy. Donated: updates in place.
+    """
+    return pool.at[:, dst].set(pool[:, src])
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,26 @@
+"""Device-side token sampling: greedy / temperature / top-k.
+
+Lives in core (pure jnp, no model or serving dependencies) so both the
+serving layer and ``models.transformer.decode_megastep`` can use it
+without a serving -> models -> serving import cycle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_device(logits: jnp.ndarray, key, temperatures: jnp.ndarray,
+                  top_k: int = 0) -> jnp.ndarray:
+    """logits: [B, V]; temperatures: [B] f32 (0 => greedy). Returns [B] i32.
+
+    Pure jnp — safe to call inside jit / lax loops (the fused megastep).
+    """
+    t = temperatures[:, None]
+    greedy = jnp.argmax(logits, axis=-1)
+    scaled = logits / jnp.maximum(t, 1e-6)
+    if top_k > 0:
+        kth = jax.lax.top_k(scaled, top_k)[0][:, -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    sampled = jax.random.categorical(key, scaled, axis=-1)
+    return jnp.where(t[:, 0] <= 0.0, greedy, sampled).astype(jnp.int32)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 PACK = 8
 
 
@@ -82,7 +84,7 @@ def gptq_matmul(
         out_specs=pl.BlockSpec((block_m, block_n), lambda m, n, k: (m, n)),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((M + pm, N + pn), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xp, qwp, sp, zp)

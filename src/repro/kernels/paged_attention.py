@@ -22,7 +22,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _clamp_live(i, seq_len, block_size):
+    """Clamp page index ``i`` to the sequence's last live page.
+
+    ``seq_len`` may be 0 for inactive slots; clamp to page 0 then (the
+    kernel's ``k_lo < seq_len`` guard skips the compute anyway).
+    """
+    last = jnp.maximum((seq_len + block_size - 1) // block_size, 1) - 1
+    return jnp.minimum(i, last)
 
 
 def _pa_kernel(block_tables_ref, seq_lens_ref,       # scalar prefetch (SMEM)
@@ -111,11 +123,17 @@ def paged_attention(
                 pl.BlockSpec((1, G), lambda b, h, i, bt, sl: (h, 0)),
                 pl.BlockSpec((1, 1, G, D), lambda b, h, i, bt, sl: (b, h, 0, 0)),
                 # the paging step: physical page id comes from the prefetched
-                # block table inside the index_map.
+                # block table inside the index_map. Pages past the sequence's
+                # live page count re-resolve to its last live page: Pallas
+                # skips the DMA when consecutive grid steps map to the same
+                # block, so the HBM walk is bounded by ceil(seq_len/BS), not
+                # the static MB (compute for those steps is skipped too).
                 pl.BlockSpec((1, BS, 1, D),
-                             lambda b, h, i, bt, sl: (bt[b, i], 0, h, 0)),
+                             lambda b, h, i, bt, sl: (
+                                 bt[b, _clamp_live(i, sl[b], BS)], 0, h, 0)),
                 pl.BlockSpec((1, BS, 1, D),
-                             lambda b, h, i, bt, sl: (bt[b, i], 0, h, 0)),
+                             lambda b, h, i, bt, sl: (
+                                 bt[b, _clamp_live(i, sl[b], BS)], 0, h, 0)),
             ],
             out_specs=pl.BlockSpec((1, 1, G, D),
                                    lambda b, h, i, bt, sl: (b, h, 0, 0)),
@@ -126,7 +144,7 @@ def paged_attention(
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(block_table, seq_lens, slopes, qg, k_pool, v_pool)

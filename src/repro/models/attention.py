@@ -171,7 +171,8 @@ def _decode_cache_attend(cfg, q, k, v, k_pool, v_pool, block_table,
         # recent ones -> attend over valid slots, mask by window distance
         # via the stored-position trick (DESIGN.md §5).
         cache_len = block_table.shape[1] * k_pool.shape[2]
-        ring_pos = (seq_lens - 1) % cache_len
+        # inactive slots (seq_len == 0) get position -1 -> write dropped
+        ring_pos = jnp.where(seq_lens > 0, (seq_lens - 1) % cache_len, -1)
         k_pool = write_decode_kv(k_pool, layer, k, block_table, ring_pos)
         v_pool = write_decode_kv(v_pool, layer, v, block_table, ring_pos)
         from repro.core.paged_cache import gather_kv

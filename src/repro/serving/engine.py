@@ -12,6 +12,19 @@ Dynamic scheduling happens in Python; the *device step* is static-shape
   (recompute-style preemption, like vLLM),
 * metrics match the paper's Fig. 2: latency, all-throughput (req/s,
   tok/s), generation throughput (tok/s).
+
+Decode fast path (``use_fused=True``, the default): instead of one jitted
+call + one blocking host sync per generated token, the engine dispatches a
+fused **decode megastep** — a single buffer-donated device call that runs
+KV scatter + paged attention + logits + sampling for up to ``max_horizon``
+tokens (``lax.fori_loop`` with a *dynamic* trip count, so no recompiles).
+The host plans ``steps_until_boundary`` = min over running sequences of
+(tokens remaining, horizon cap), pre-allocates every KV block the horizon
+will touch (copy-on-write resolved by a device-side block copy, never via
+host numpy), dispatches exactly that many fused steps, and reads back one
+``[horizon, slots]`` token buffer — a single host↔device round trip per
+horizon. The legacy per-token loop is kept (``use_fused=False``) as the
+bitwise-equivalence oracle and bench baseline.
 """
 from __future__ import annotations
 
@@ -24,7 +37,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.paged_cache import BlockAllocator, OutOfBlocksError
+from repro.core.paged_cache import (BlockAllocator, OutOfBlocksError,
+                                    copy_blocks)
 from repro.models import transformer as T
 from repro.serving.sampler import sample
 
@@ -55,13 +69,16 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
                  num_blocks: int = 512, max_blocks_per_seq: int = 64,
                  prefill_bucket: int = 64, rt: Optional[dict] = None,
-                 seed: int = 0):
+                 seed: int = 0, use_fused: bool = True,
+                 max_horizon: int = 8):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.mb = max_blocks_per_seq
         self.prefill_bucket = prefill_bucket
         self.rt = dict(rt or {})
+        self.use_fused = use_fused
+        self.max_horizon = max(1, max_horizon)
         self.alloc = BlockAllocator(
             num_blocks, cfg.paging.block_size,
             enable_prefix_reuse=cfg.paging.enable_prefix_reuse,
@@ -73,14 +90,30 @@ class ServingEngine:
         self.finished: List[Request] = []
         self.free_slots = list(range(max_slots - 1, -1, -1))
         self.key = jax.random.PRNGKey(seed)
-        self.metrics: Dict[str, float] = {"prompt_tokens": 0,
-                                          "gen_tokens": 0, "preemptions": 0}
+        self.metrics: Dict[str, float] = {
+            "prompt_tokens": 0, "gen_tokens": 0, "preemptions": 0,
+            "host_syncs": 0, "decode_dispatches": 0, "decode_steps": 0,
+            "decode_time_s": 0.0, "truncated_prompts": 0,
+            # dispatches after the first: excludes jit compile of the step
+            "decode_warm_steps": 0, "decode_warm_time_s": 0.0}
         self._t0: Optional[float] = None
+        # sliding-window-only archs use a fixed ring cache: no block growth
+        self._ring_only = bool(cfg.sliding_window) and not any(
+            cfg.layer_kind(i) == "full" for i in range(cfg.num_layers))
+        # hard per-sequence KV capacity: the block table is mb entries wide
+        self._cap_tokens = self.mb * self.alloc.block_size
 
         self._prefill = jax.jit(
             lambda p, s, b: T.prefill(cfg, p, s, b, None, self.rt))
         self._decode = jax.jit(
             lambda p, s, t: T.decode_step(cfg, p, s, t, None, self.rt))
+        # the fused megastep donates the whole decode state: the KV pools
+        # are updated in place instead of copied every token.
+        self._megastep = jax.jit(
+            lambda p, s, t, tm, a, n, k: T.decode_megastep(
+                cfg, p, s, t, tm, a, n, k,
+                max_horizon=self.max_horizon, ctx=None, rt=self.rt),
+            donate_argnums=(1,))
 
     # ------------------------------------------------------------ intake
     def add_request(self, req: Request) -> None:
@@ -96,6 +129,15 @@ class ServingEngine:
         admitted: List[_Seq] = []
         while self.waiting and self.free_slots:
             req = self.waiting[0]
+            if len(req.prompt) > self._cap_tokens:
+                # prompt would overflow the mb-wide block table: clamp it
+                # instead of crashing the prefill scatter. An exactly-cap
+                # prompt still fits (it prefills, yields one token, then
+                # force-finishes), so requeued preempted sequences — whose
+                # prompt+output never exceeds cap — are never clamped and
+                # keep their full generated context.
+                req.prompt = req.prompt[:self._cap_tokens]
+                self.metrics["truncated_prompts"] += 1
             need = (len(req.prompt) + self.alloc.block_size - 1) \
                 // self.alloc.block_size + 1
             if not self.alloc.can_allocate(need):
@@ -111,7 +153,6 @@ class ServingEngine:
             self._run_prefill(admitted)
 
     def _run_prefill(self, seqs: List[_Seq]) -> None:
-        bs = self.alloc.block_size
         maxlen = self._bucket(max(s.seq_len for s in seqs))
         B = len(seqs)
         toks = np.zeros((B, maxlen), np.int32)
@@ -148,6 +189,7 @@ class ServingEngine:
         # first sampled token
         self.key, sk = jax.random.split(self.key)
         nxt = sample(logits, sk, [s.req.temperature for s in seqs])
+        self.metrics["host_syncs"] += 1
         now = time.perf_counter()
         for i, s in enumerate(seqs):
             tok = int(nxt[i])
@@ -157,6 +199,10 @@ class ServingEngine:
             s.seq_len += 1
             self.metrics["gen_tokens"] += 1
             self._maybe_finish(s)
+        # leave self.state consistent with the host bookkeeping (seq_lens /
+        # block_table rows for the slots just prefilled or freed) instead of
+        # relying on the next decode's _sync_tables.
+        self._sync_tables()
 
     # ------------------------------------------------------------ decode
     def _sync_tables(self) -> None:
@@ -169,29 +215,67 @@ class ServingEngine:
             self.state["block_table"] = jnp.asarray(bt)
         self.state["seq_lens"] = jnp.asarray(sl)
 
-    def _grow_blocks(self, s: _Seq) -> None:
-        bs = self.alloc.block_size
-        pos = s.seq_len - 1                      # position the new token writes
-        if self.cfg.sliding_window and not any(
-                self.cfg.layer_kind(i) == "full"
-                for i in range(self.cfg.num_layers)):
-            return                               # ring cache: fixed blocks
-        s.block_ids, _cow = self.alloc.append_slot(s.block_ids, pos)
+    def _grow_blocks(self, s: _Seq, num_tokens: int = 1):
+        """Ensure KV capacity for the next ``num_tokens`` writes; returns
+        the (src, dst) CoW block pair (device copy pending) or None."""
+        if self._ring_only:
+            return None                          # ring cache: fixed blocks
+        pos = s.seq_len - 1                      # position the next write hits
+        s.block_ids, cow = self.alloc.grow(s.block_ids, pos, num_tokens)
+        return cow
+
+    def _writes_left(self, s: _Seq) -> int:
+        """Tokens the sequence can still decode before its block table is
+        full (next write position is seq_len - 1)."""
+        if self._ring_only:
+            return 10**9                         # ring slots wrap forever
+        return self._cap_tokens - (s.seq_len - 1)
+
+    def _finish_at_capacity(self) -> None:
+        """Force-finish sequences whose next KV write would overflow the
+        ``max_blocks_per_seq``-wide block table (output is truncated)."""
+        for slot in list(self.running):
+            if self._writes_left(self.running[slot]) <= 0:
+                self._finish(self.running[slot])
 
     def step(self) -> None:
-        """One engine iteration: admit, then one decode for all running."""
+        """One engine iteration: admit, then decode for all running —
+        a single token (legacy) or a fused multi-token horizon."""
         if self._t0 is None:
             self._t0 = time.perf_counter()
+        self._finish_at_capacity()       # free slots/blocks before admission
         self._try_admit()
+        self._finish_at_capacity()       # a fresh exactly-cap prefill may
+        if not self.running:             # already be at the table boundary
+            return
+        if self.use_fused:
+            self._decode_fused()
+        else:
+            self._decode_legacy()
+
+    # -- legacy per-token loop (oracle + bench baseline) -----------------
+    def _decode_legacy(self) -> None:
+        t0 = time.perf_counter()
+        # grow block tables (may preempt on OOM; retry growth after a
+        # preemption frees blocks — otherwise this sequence would decode
+        # through a zero-padded block-table row and corrupt block 0)
+        for slot in sorted(self.running):
+            s = self.running.get(slot)
+            if s is None:                        # preempted earlier this pass
+                continue
+            cow = None
+            while slot in self.running:
+                try:
+                    cow = self._grow_blocks(s)
+                    break
+                except OutOfBlocksError:
+                    self._preempt_youngest()     # may preempt s itself
+            if slot not in self.running:
+                continue
+            if cow is not None:
+                self._copy_cow([cow])
         if not self.running:
             return
-        # grow block tables (may preempt on OOM)
-        for slot in sorted(self.running):
-            s = self.running[slot]
-            try:
-                self._grow_blocks(s)
-            except OutOfBlocksError:
-                self._preempt_youngest()
         self._sync_tables()
         toks = np.zeros((self.max_slots,), np.int32)
         for slot, s in self.running.items():
@@ -202,6 +286,9 @@ class ServingEngine:
         temps = [self.running[s].req.temperature if s in self.running else 0.0
                  for s in range(self.max_slots)]
         nxt = sample(logits, sk, temps)
+        self.metrics["host_syncs"] += 1
+        self.metrics["decode_dispatches"] += 1
+        self.metrics["decode_steps"] += 1
         now = time.perf_counter()
         for slot in list(self.running):
             s = self.running[slot]
@@ -211,14 +298,102 @@ class ServingEngine:
             s.seq_len += 1
             self.metrics["gen_tokens"] += 1
             self._maybe_finish(s)
+        self._record_decode_time(time.perf_counter() - t0, 1)
+
+    def _record_decode_time(self, dt: float, steps: int) -> None:
+        self.metrics["decode_time_s"] += dt
+        if self.metrics["decode_dispatches"] > 1:    # past the compile call
+            self.metrics["decode_warm_time_s"] += dt
+            self.metrics["decode_warm_steps"] += steps
+
+    # -- fused megastep path ---------------------------------------------
+    def _plan_horizon(self) -> int:
+        """steps_until_boundary: the longest horizon every running sequence
+        can decode without host intervention — bounded by tokens remaining
+        (finish boundary) and by free KV blocks (allocation boundary).
+        Preempts the youngest sequence if even a single step cannot fit."""
+        while self.running:
+            h = min(self.max_horizon,
+                    min(min(s.req.max_new_tokens - len(s.req.output),
+                            self._writes_left(s))
+                        for s in self.running.values()))
+            h = max(1, h)
+            if self._ring_only:
+                return h
+            while h >= 1:
+                need = sum(
+                    self.alloc.blocks_needed(s.block_ids, s.seq_len - 1, h)
+                    for s in self.running.values())
+                if need <= self.alloc.num_free:
+                    return h
+                h -= 1                   # linear: blocks_needed is monotone
+            self._preempt_youngest()
+        return 0
+
+    def _copy_cow(self, pairs) -> None:
+        """Resolve copy-on-write on device: block contents never visit the
+        host. pairs: [(src_block, dst_block), ...]. Padded to a fixed
+        ``max_slots`` length so ``copy_blocks`` compiles once, not once per
+        CoW batch size. Padding entries are self-copies of the first src
+        block: a pad index can never collide with a real dst (dst blocks
+        are freshly allocated, src blocks are still live), so the scatter
+        stays duplicate-free on every real destination."""
+        pad = (pairs[0][0],) * (self.max_slots - len(pairs))
+        src = np.asarray([p[0] for p in pairs] + list(pad), np.int32)
+        dst = np.asarray([p[1] for p in pairs] + list(pad), np.int32)
+        self.state["k_pool"] = copy_blocks(self.state["k_pool"], src, dst)
+        self.state["v_pool"] = copy_blocks(self.state["v_pool"], src, dst)
+
+    def _decode_fused(self) -> None:
+        t0 = time.perf_counter()
+        h = self._plan_horizon()
+        if not self.running or h == 0:
+            return
+        # pre-allocate every block the horizon touches; CoW via device copy
+        cow_pairs = []
+        for slot in sorted(self.running):
+            s = self.running[slot]
+            cow = self._grow_blocks(s, h)        # cannot raise: h was planned
+            if cow is not None:
+                cow_pairs.append(cow)
+        if cow_pairs:
+            self._copy_cow(cow_pairs)
+        self._sync_tables()
+        toks = np.zeros((self.max_slots,), np.int32)
+        temps = np.zeros((self.max_slots,), np.float32)
+        active = np.zeros((self.max_slots,), bool)
+        for slot, s in self.running.items():
+            toks[slot] = s.last_token
+            temps[slot] = s.req.temperature
+            active[slot] = True
+        out, self.state, self.key = self._megastep(
+            self.params, self.state, jnp.asarray(toks), jnp.asarray(temps),
+            jnp.asarray(active), jnp.int32(h), self.key)
+        out_np = np.asarray(out[:h])             # the ONE host sync
+        self.metrics["host_syncs"] += 1
+        self.metrics["decode_dispatches"] += 1
+        self.metrics["decode_steps"] += h
+        for slot in list(self.running):
+            s = self.running[slot]
+            for t in range(h):
+                tok = int(out_np[t, slot])
+                s.req.output.append(tok)
+                s.last_token = tok
+                s.seq_len += 1
+                self.metrics["gen_tokens"] += 1
+            self._maybe_finish(s)
+        self._record_decode_time(time.perf_counter() - t0, h)
+
+    def _finish(self, s: _Seq) -> None:
+        s.req.done_t = time.perf_counter()
+        self.finished.append(s.req)
+        self.alloc.free_sequence(s.block_ids)
+        del self.running[s.slot]
+        self.free_slots.append(s.slot)
 
     def _maybe_finish(self, s: _Seq) -> None:
         if len(s.req.output) >= s.req.max_new_tokens:
-            s.req.done_t = time.perf_counter()
-            self.finished.append(s.req)
-            self.alloc.free_sequence(s.block_ids)
-            del self.running[s.slot]
-            self.free_slots.append(s.slot)
+            self._finish(s)
 
     def _preempt_youngest(self) -> None:
         slot = max(self.running,
@@ -240,13 +415,20 @@ class ServingEngine:
         return self.report()
 
     def report(self) -> Dict[str, float]:
-        """The paper's three numbers."""
+        """The paper's three numbers (+ fast-path counters)."""
         t1 = time.perf_counter()
         wall = max(t1 - (self._t0 or t1), 1e-9)
         n = len(self.finished)
         lat = float(np.mean([r.done_t - r.arrival for r in self.finished])) \
             if n else float("nan")
         total_toks = self.metrics["prompt_tokens"] + self.metrics["gen_tokens"]
+        d_steps = max(self.metrics["decode_steps"], 1)
+        # prefer warm (post-compile) per-step latency when measurable
+        if self.metrics["decode_warm_steps"]:
+            step_lat = (self.metrics["decode_warm_time_s"]
+                        / self.metrics["decode_warm_steps"])
+        else:
+            step_lat = self.metrics["decode_time_s"] / d_steps
         return {
             "latency_s": lat,
             "throughput_req_s": n / wall,
@@ -256,4 +438,12 @@ class ServingEngine:
             "block_utilization": self.alloc.utilization(),
             "blocks_reused": self.alloc.stats["reused"],
             "wall_s": wall,
+            "host_syncs": self.metrics["host_syncs"],
+            "decode_dispatches": self.metrics["decode_dispatches"],
+            "decode_steps": self.metrics["decode_steps"],
+            "decode_step_latency_us": step_lat * 1e6,
+            # decode-path syncs only (one per dispatch): prefill-wave syncs
+            # are excluded, so legacy reads exactly 1.0 and fused 1/horizon
+            "syncs_per_decode_step":
+                self.metrics["decode_dispatches"] / d_steps,
         }

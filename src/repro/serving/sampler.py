@@ -1,21 +1,24 @@
-"""Token sampling: greedy / temperature / top-k."""
+"""Token sampling: greedy / temperature / top-k.
+
+``sample_device`` (re-exported from ``repro.core.sampling``) is the
+jit-friendly core used inside the fused decode megastep; ``sample`` is the
+host-facing wrapper the prefill path (and legacy per-token decode loop)
+calls.
+"""
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.sampling import sample_device
+
+__all__ = ["sample", "sample_device"]
 
 
 def sample(logits: jnp.ndarray, key, temperatures: Sequence[float],
            top_k: int = 0) -> np.ndarray:
-    """logits: [B, V]; per-sequence temperature (0 => greedy)."""
-    t = jnp.asarray(list(temperatures), jnp.float32)[:, None]
-    greedy = jnp.argmax(logits, axis=-1)
-    scaled = logits / jnp.maximum(t, 1e-6)
-    if top_k > 0:
-        kth = jax.lax.top_k(scaled, top_k)[0][:, -1:]
-        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
-    sampled = jax.random.categorical(key, scaled, axis=-1)
-    return np.asarray(jnp.where(t[:, 0] <= 0.0, greedy, sampled))
+    """Host wrapper: python temperature list in, numpy token ids out."""
+    t = jnp.asarray(list(temperatures), jnp.float32)
+    return np.asarray(sample_device(logits, key, t, top_k))
