@@ -3,19 +3,27 @@
 Small same-shape models on CPU: 'mha' (kv=H, contiguous-style oversized
 blocks, no reuse) vs 'opt-gqa' (kv=H/4, paged, prefix reuse, ALiBi-ready).
 Reported: latency, all-throughput (req/s, tok/s), generate throughput —
-exactly the paper's three numbers (ratios are the transferable signal).
+exactly the paper's three numbers (ratios are the transferable signal) —
+plus streamed time-to-first-token (``ttft_ms``), measured at the moment
+the engine emits a request's first ``RequestOutput`` delta.
 
 ``table_fastpath`` quantifies the fused decode megastep against the legacy
 per-token loop on the same workload: per-engine-step decode latency,
-host↔device syncs per decode step, and generate throughput. Run as a
+host↔device syncs per decode step, TTFT and generate throughput. Run as a
 module for smoke mode + JSON trajectory tracking::
 
     PYTHONPATH=src python -m benchmarks.bench_serving --smoke \
-        --json BENCH_serving.json
+        --json BENCH_serving.json \
+        [--assert-baseline BENCH_serving.json --regress-factor 1.10]
+
+``--assert-baseline`` fails the run if the fused warm decode-step latency
+regressed past ``--regress-factor`` × the committed baseline row.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 
 import jax
 import numpy as np
@@ -23,21 +31,20 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs.registry import get_reduced
 from repro.models import transformer as T
-from repro.serving.engine import Request, ServingEngine
+from repro.serving import SamplingParams, ServingEngine
 
 
-def _run_engine(cfg, params, seed=0, *, n_requests=12, max_new_tokens=8,
+def _run_engine(cfg, params, seed=0, *, n_requests=12, max_tokens=8,
                 use_fused=True, max_horizon=8):
     eng = ServingEngine(cfg, params, max_slots=4, num_blocks=256,
                         max_blocks_per_seq=16, prefill_bucket=32,
                         use_fused=use_fused, max_horizon=max_horizon)
     rng = np.random.default_rng(seed)
     prefix = list(rng.integers(1, 200, 24))
-    for i in range(n_requests):
-        eng.add_request(Request(
-            rid=i, prompt=prefix + list(rng.integers(1, 200,
-                                                     int(rng.integers(4, 24)))),
-            max_new_tokens=max_new_tokens))
+    sp = SamplingParams(max_tokens=max_tokens)
+    for _ in range(n_requests):
+        eng.add(prefix + list(rng.integers(1, 200,
+                                           int(rng.integers(4, 24)))), sp)
     return eng.run_until_done()
 
 
@@ -55,6 +62,7 @@ def table_fig2(smoke: bool = False) -> None:
              f"req_s={r['throughput_req_s']:.3f};"
              f"tok_s={r['throughput_tok_s']:.1f};"
              f"gen_tok_s={r['generate_tok_s']:.1f};"
+             f"ttft_ms={r['ttft_s'] * 1e3:.1f};"
              f"reused={r['blocks_reused']}")
 
 
@@ -78,7 +86,9 @@ def table_fig3(smoke: bool = False) -> None:
 def table_fastpath(smoke: bool = False) -> None:
     """Decode fast path: legacy per-token loop vs fused megastep on the
     same workload. The win shows up as fewer host syncs per decode step
-    (1.0 -> ~1/horizon) and lower per-step decode latency."""
+    (1.0 -> ~1/horizon) and lower per-step decode latency; ``ttft_ms`` is
+    the streamed time-to-first-token (prefill wave -> first emitted
+    RequestOutput), which the fused path leaves untouched."""
     key = jax.random.PRNGKey(0)
     cfg = get_reduced("qwen1.5-0.5b", num_layers=4, num_heads=8,
                       num_kv_heads=2)
@@ -90,14 +100,70 @@ def table_fastpath(smoke: bool = False) -> None:
     mnt = 12 if smoke else 64
     horizon = 4 if smoke else 8
     for name, fused in (("legacy", False), ("fused", True)):
-        r = _run_engine(cfg, params, n_requests=n_req, max_new_tokens=mnt,
+        r = _run_engine(cfg, params, n_requests=n_req, max_tokens=mnt,
                         use_fused=fused, max_horizon=horizon)
         emit(f"fastpath_{name}", r["decode_step_latency_us"],
              f"gen_tok_s={r['generate_tok_s']:.1f};"
+             f"ttft_ms={r['ttft_s'] * 1e3:.1f};"
              f"syncs_per_step={r['syncs_per_decode_step']:.3f};"
              f"decode_steps={r['decode_steps']};"
              f"dispatches={r['decode_dispatches']};"
              f"host_syncs={r['host_syncs']}")
+
+
+def assert_no_regression(rows, baseline_path: str, factor: float,
+                         smoke: bool = False) -> None:
+    """Warm fused decode-step latency must stay within ``factor`` x the
+    committed baseline (acceptance: no warm-decode-step regression).
+    Only like-for-like comparisons are meaningful: if the baseline was
+    recorded in a different mode (smoke vs full workload), the gate is
+    skipped with a notice instead of comparing incomparable numbers."""
+    with open(baseline_path) as f:
+        doc = json.load(f)
+    base_smoke = bool(doc.get("meta", {}).get("smoke"))
+    if base_smoke != smoke:
+        print(f"skipping regression gate: baseline {baseline_path} was "
+              f"recorded with smoke={base_smoke}, this run is "
+              f"smoke={smoke} (different workloads)")
+        return
+    base_rows = {r["name"]: r for r in doc["rows"]}
+    if "fastpath_fused" not in base_rows:
+        print(f"skipping regression gate: {baseline_path} has no "
+              f"fastpath_fused row")
+        return
+    base = base_rows["fastpath_fused"]["us_per_call"]
+    cur = None
+    for row in rows:
+        name, us, _ = row.split(",", 2)
+        if name == "fastpath_fused":
+            cur = float(us)
+    assert cur is not None, "fastpath_fused row missing from this run"
+    if cur > base * factor:
+        print(f"REGRESSION: fused warm decode step {cur:.1f}us > "
+              f"{factor:.2f} x baseline {base:.1f}us", file=sys.stderr)
+        sys.exit(1)
+    print(f"fused warm decode step {cur:.1f}us vs baseline {base:.1f}us "
+          f"(allowed {factor:.2f}x): OK")
+
+
+def assert_fastpath_ratio(rows, max_ratio: float) -> None:
+    """Machine-independent gate: within THIS run, the fused megastep's
+    warm decode step must stay under ``max_ratio`` x the legacy loop's.
+    Catches the fast path breaking (ratio -> ~1.0) regardless of how
+    slow the host is, so it is safe on shared CI runners."""
+    us = {}
+    for row in rows:
+        name, v, _ = row.split(",", 2)
+        if name in ("fastpath_legacy", "fastpath_fused"):
+            us[name] = float(v)
+    ratio = us["fastpath_fused"] / us["fastpath_legacy"]
+    if ratio > max_ratio:
+        print(f"REGRESSION: fused/legacy warm-step ratio {ratio:.3f} > "
+              f"{max_ratio:.2f} ({us['fastpath_fused']:.1f}us vs "
+              f"{us['fastpath_legacy']:.1f}us)", file=sys.stderr)
+        sys.exit(1)
+    print(f"fused/legacy warm-step ratio {ratio:.3f} "
+          f"(allowed {max_ratio:.2f}): OK")
 
 
 def run(smoke: bool = False) -> None:
@@ -112,14 +178,27 @@ def main() -> None:
                     help="reduced request counts (CI)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON (e.g. BENCH_serving.json)")
+    ap.add_argument("--assert-baseline", default=None, metavar="PATH",
+                    help="fail if fused warm decode-step latency regressed "
+                         "vs this BENCH_serving.json")
+    ap.add_argument("--regress-factor", type=float, default=1.10,
+                    help="allowed slowdown factor for --assert-baseline")
+    ap.add_argument("--assert-fastpath-ratio", type=float, default=None,
+                    metavar="R", help="fail if fused/legacy warm-step "
+                    "ratio within this run exceeds R (machine-independent)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     run(smoke=args.smoke)
+    from benchmarks.common import ROWS
     if args.json:
-        from benchmarks.common import ROWS
         from benchmarks.report import write_bench_json
         write_bench_json(ROWS, args.json, smoke=args.smoke)
         print(f"wrote {args.json}")
+    if args.assert_baseline:
+        assert_no_regression(ROWS, args.assert_baseline,
+                             args.regress_factor, smoke=args.smoke)
+    if args.assert_fastpath_ratio is not None:
+        assert_fastpath_ratio(ROWS, args.assert_fastpath_ratio)
 
 
 if __name__ == "__main__":

@@ -1,49 +1,48 @@
 """Quickstart: build a reduced Opt-GPTQ stack end to end on CPU.
 
-1. init a small GQA model, 2. quantize it with GPTQ (int4, Hessian-based),
-3. serve a batch of prompts through the paged continuous-batching engine,
-4. print the paper's three metrics.
+One line constructs the whole stack — architecture from the registry,
+GPTQ int4 weights (Hessian-based, synthetic calibration), and the paged
+continuous-batching engine::
+
+    llm = LLM.load("qwen2-1.5b", quant="gptq-int4", reduced=True, ...)
+
+then ``generate`` serves a batch with per-request ``SamplingParams`` and
+we print the paper's three metrics.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import QuantConfig
-from repro.configs.registry import get_reduced
-from repro.models import transformer as T
-from repro.models.quantize import gptq_quantize_model
-from repro.serving.engine import Request, ServingEngine
+from repro.serving import LLM, SamplingParams
 
 
 def main():
-    key = jax.random.PRNGKey(0)
-    cfg = get_reduced("qwen2-1.5b", num_layers=4)
-    print(f"model: {cfg.name} (reduced) — {cfg.num_heads} q-heads sharing "
-          f"{cfg.num_kv_heads} kv-heads (Opt-GQA group size "
-          f"{cfg.q_per_kv})")
-    params = T.init_params(cfg, key)
+    llm = LLM.load("qwen2-1.5b", quant="gptq-int4", reduced=True,
+                   overrides=dict(num_layers=4), max_slots=4,
+                   num_blocks=128, max_blocks_per_seq=8, prefill_bucket=16)
+    cfg = llm.cfg
+    print(f"model: {cfg.name} (reduced, GPTQ int4) — {cfg.num_heads} "
+          f"q-heads sharing {cfg.num_kv_heads} kv-heads (Opt-GQA group "
+          f"size {cfg.q_per_kv})")
 
-    print("GPTQ-quantizing linears to int4 (Hessian from 2 calib batches)…")
-    calib = [{"tokens": jax.random.randint(jax.random.fold_in(key, i),
-                                           (2, 32), 0, cfg.vocab_size)}
-             for i in range(2)]
-    qparams = gptq_quantize_model(cfg, params, calib,
-                                  QuantConfig(bits=4, group_size=32))
-
-    eng = ServingEngine(cfg, qparams, max_slots=4, num_blocks=128,
-                        max_blocks_per_seq=8, prefill_bucket=16)
     rng = np.random.default_rng(0)
     prefix = list(rng.integers(1, 200, 16))          # shared -> prefix reuse
-    for i in range(8):
-        eng.add_request(Request(
-            rid=i, prompt=prefix + list(rng.integers(1, 200,
-                                                     int(rng.integers(3, 12)))),
-            max_new_tokens=8))
-    rep = eng.run_until_done()
+    prompts = [prefix + list(rng.integers(1, 200, int(rng.integers(3, 12))))
+               for _ in range(8)]
+    # one batch mixes greedy and sampled requests
+    sps = [SamplingParams(max_tokens=8) if i % 2 == 0 else
+           SamplingParams(temperature=0.8, top_k=40, top_p=0.95,
+                          max_tokens=8)
+           for i in range(len(prompts))]
+    outs = llm.generate(prompts, sps)
+    for out in outs[:3]:
+        print(f"  req {out.request_id}: {out.token_ids} "
+              f"({out.finish_reason})")
+
+    rep = llm.engine.report()
     print("\npaper metrics (Fig.2 format):")
-    print(f"  latency:             {rep['latency_s']:.2f} s")
+    print(f"  latency:             {rep['latency_s']:.2f} s "
+          f"(ttft {rep['ttft_s']:.2f} s)")
     print(f"  all throughput:      {rep['throughput_req_s']:.2f} req/s, "
           f"{rep['throughput_tok_s']:.1f} tok/s")
     print(f"  generate throughput: {rep['generate_tok_s']:.1f} tok/s")

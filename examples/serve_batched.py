@@ -1,16 +1,17 @@
-"""End-to-end serving driver: a small model under continuous batching with
-Poisson arrivals, preemption pressure, and the paper's metric report.
+"""End-to-end streamed serving: continuous request intake under preemption
+pressure, consuming ``RequestOutput`` deltas as horizons complete.
+
+Requests are added *while* the stream is being consumed (Poisson-ish
+arrivals), each with its own ``SamplingParams`` — greedy, temperature and
+top-p requests share every batch. Ends with the paper's metric report.
 
     PYTHONPATH=src python examples/serve_batched.py [--requests 24]
 """
 import argparse
 
-import jax
 import numpy as np
 
-from repro.configs.registry import get_reduced
-from repro.models import transformer as T
-from repro.serving.engine import Request, ServingEngine
+from repro.serving import LLM, SamplingParams
 
 
 def main():
@@ -21,34 +22,51 @@ def main():
                     help="small pool => exercises preemption")
     args = ap.parse_args()
 
-    cfg = get_reduced(args.arch, num_layers=4)
-    params = T.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, max_slots=6, num_blocks=args.blocks,
-                        max_blocks_per_seq=12, prefill_bucket=32)
+    llm = LLM.load(args.arch, reduced=True, overrides=dict(num_layers=4),
+                   max_slots=6, num_blocks=args.blocks,
+                   max_blocks_per_seq=12, prefill_bucket=32)
+    eng = llm.engine
+
     rng = np.random.default_rng(0)
     prefix = list(rng.integers(1, 200, 24))
-    pending = [Request(rid=i,
-                       prompt=prefix + list(rng.integers(
-                           1, 200, int(rng.integers(4, 40)))),
-                       max_new_tokens=int(rng.integers(4, 16)),
-                       temperature=0.7 if i % 3 == 0 else 0.0)
-               for i in range(args.requests)]
-    # Poisson-ish arrivals: 2 per engine step
-    step = 0
-    while pending or eng.waiting or eng.running:
-        for _ in range(2):
-            if pending:
-                eng.add_request(pending.pop(0))
-        eng.step()
-        step += 1
-        if step % 20 == 0:
-            print(f"step {step}: running={len(eng.running)} "
-                  f"waiting={len(eng.waiting)} done={len(eng.finished)} "
+
+    def make_request(i):
+        prompt = prefix + list(rng.integers(1, 200, int(rng.integers(4, 40))))
+        sp = SamplingParams(
+            temperature=0.7 if i % 3 == 0 else 0.0,
+            top_p=0.9 if i % 3 == 0 else 1.0,
+            max_tokens=int(rng.integers(4, 16)))
+        return prompt, sp
+
+    # seed the engine with a couple of requests, then keep adding while
+    # consuming the stream — continuous intake, no drain barrier.
+    pending = [make_request(i) for i in range(args.requests)]
+    for _ in range(2):
+        if pending:
+            eng.add(*pending.pop(0))
+
+    events = finished = 0
+    first_tokens_seen = 0
+    for out in eng.stream():
+        events += 1
+        if len(out.token_ids) == len(out.new_token_ids):
+            first_tokens_seen += 1
+        if out.finished:
+            finished += 1
+        # Poisson-ish arrivals: ~1 new request per streamed event
+        if pending:
+            eng.add(*pending.pop(0))
+        if events % 20 == 0:
+            print(f"event {events}: running={len(eng.running)} "
+                  f"waiting={len(eng.waiting)} done={finished} "
                   f"pool_util={eng.alloc.utilization():.2f}")
+
+    print(f"\n{events} streamed events, {finished} finished "
+          f"({first_tokens_seen} first-token events before any drain)")
     rep = eng.report()
-    print("\nfinal report:")
+    print("final report:")
     for k, v in rep.items():
-        print(f"  {k:20s} {v}")
+        print(f"  {k:22s} {v}")
 
 
 if __name__ == "__main__":

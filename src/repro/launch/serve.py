@@ -1,62 +1,90 @@
-"""Serving driver: continuous batching over the paged engine.
+"""Serving driver: continuous batching over the paged engine via ``LLM``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
-        --requests 16 [--quant] [--mha-baseline]
+        --requests 16 [--quant gptq-int4] [--stream] [--top-k 40] \
+        [--top-p 0.95] [--temperature 0.8] [--stop 13 198] [--mha-baseline]
 
 ``--mha-baseline`` serves the same arch with kv_heads == num_heads and
-prefix reuse off — the paper's comparison point (Fig. 2).
+prefix reuse off — the paper's comparison point (Fig. 2). ``--stream``
+prints each ``RequestOutput`` delta as horizons complete instead of
+waiting for the batch to drain.
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-import jax
 import numpy as np
 
-from repro.configs.base import PagingConfig, QuantConfig
-from repro.configs.registry import get_config, get_reduced
-from repro.models import transformer as T
-from repro.serving.engine import Request, ServingEngine
+from repro.configs.base import PagingConfig
+from repro.serving import LLM, SamplingParams
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
-    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="serve the tiny same-family CPU config "
+                         "(--no-reduced loads the full-size one)")
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-tokens", "--max-new", dest="max_tokens",
+                    type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--blocks", type=int, default=256)
-    ap.add_argument("--quant", action="store_true",
-                    help="serve int4 GPTQ weights (Opt-GPTQ configuration)")
+    ap.add_argument("--quant", default=None,
+                    choices=["rtn-int4", "gptq-int4"],
+                    help="serve int4 weights (Opt-GPTQ configuration): "
+                         "RTN or Hessian-based GPTQ")
+    ap.add_argument("--checkpoint", default=None,
+                    help="Checkpointer directory to restore params from")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--stop", type=int, nargs="*", default=[],
+                    help="stop token ids (finish_reason='stop')")
+    ap.add_argument("--stream", action="store_true",
+                    help="print RequestOutput deltas as they arrive")
     ap.add_argument("--mha-baseline", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    overrides = {}
     if args.mha_baseline:
-        cfg = cfg.replace(num_kv_heads=cfg.num_heads,
-                          paging=PagingConfig(enable_prefix_reuse=False))
-    params = T.init_params(cfg, jax.random.PRNGKey(0))
-    if args.quant:
-        from repro.models.quantize import quantize_params_rtn
-        params = quantize_params_rtn(params, cfg, group_size=32)
+        from repro.configs.registry import get_config, get_reduced
+        base = get_reduced(args.arch) if args.reduced else \
+            get_config(args.arch)
+        overrides = dict(num_kv_heads=base.num_heads,
+                         paging=PagingConfig(enable_prefix_reuse=False))
+    llm = LLM.load(args.arch, quant=args.quant, checkpoint=args.checkpoint,
+                   reduced=args.reduced, overrides=overrides,
+                   seed=args.seed, max_slots=args.slots,
+                   num_blocks=args.blocks, max_blocks_per_seq=16,
+                   prefill_bucket=32)
 
-    eng = ServingEngine(cfg, params, max_slots=args.slots,
-                        num_blocks=args.blocks, max_blocks_per_seq=16,
-                        prefill_bucket=32, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     prefix = list(rng.integers(1, 200, 24))
-    for i in range(args.requests):
-        eng.add_request(Request(
-            rid=i,
-            prompt=prefix + list(rng.integers(1, 200,
-                                              int(rng.integers(4, 32)))),
-            max_new_tokens=args.max_new))
-    rep = eng.run_until_done()
+    prompts = [prefix + list(rng.integers(1, 200, int(rng.integers(4, 32))))
+               for _ in range(args.requests)]
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p, stop=list(args.stop),
+                        max_tokens=args.max_tokens)
+
+    if args.stream:
+        for out in llm.stream(prompts, sp):
+            print(json.dumps({
+                "rid": out.request_id, "new": out.new_token_ids,
+                "n_total": len(out.token_ids),
+                "finish_reason": out.finish_reason}))
+    else:
+        outs = llm.generate(prompts, sp)
+        for out in outs:
+            print(json.dumps({"rid": out.request_id,
+                              "tokens": out.token_ids,
+                              "finish_reason": out.finish_reason}))
+    rep = llm.engine.report()
     mode = ("mha" if args.mha_baseline else "opt-gqa") + \
-        ("+int4" if args.quant else "")
+        (f"+{args.quant}" if args.quant else "")
     print(json.dumps({"mode": mode, **{k: round(float(v), 4)
                                        for k, v in rep.items()}}, indent=1))
 

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core.sampling import sample_device
+from repro.core.sampling import sample_from_logits
 from repro.models import ssm as ssm_mod
 from repro.models.attention import (attn_apply, attn_decode, attn_init,
                                     attn_prefill)
@@ -347,30 +347,34 @@ def decode_step(cfg: ModelConfig, params: Params,
 
 def decode_megastep(cfg: ModelConfig, params: Params,
                     state: Dict[str, jnp.ndarray], tokens: jnp.ndarray,
-                    temps: jnp.ndarray, active: jnp.ndarray,
-                    n_steps: jnp.ndarray, key: jnp.ndarray, *,
+                    sampling: Dict[str, jnp.ndarray], active: jnp.ndarray,
+                    n_steps: jnp.ndarray, *,
                     max_horizon: int,
                     ctx: Optional[ParallelCtx] = None,
                     rt: Optional[dict] = None
-                    ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray],
-                               jnp.ndarray]:
+                    ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Fused decode fast path: up to ``max_horizon`` decode+sample steps in
     ONE device call — KV scatter, paged attention, logits and sampling all
     stay on device; the host only sees the final [max_horizon, B] token
     buffer (a single transfer per dispatched horizon).
 
     tokens: [B] last sampled token per slot (state["seq_lens"] counts it).
-    temps:  [B] f32 per-slot temperature (0 => greedy).
+    sampling: padded per-slot ``SamplingParams`` arrays —
+            keys [B, 2] uint32 (per-slot PRNG stream roots),
+            counts [B] i32 (tokens generated so far: the stream position),
+            temps [B] f32 (0 => greedy), top_ks [B] i32 (0 => off),
+            top_ps [B] f32 (1.0 => off).  Step ``t`` of the horizon
+            samples slot ``b`` with ``fold_in(keys[b], counts[b] + t)`` —
+            exactly the key the legacy host loop derives, so fused and
+            legacy outputs are bitwise identical per slot.
     active: [B] bool; inactive slots are carried through untouched (their
             KV writes are dropped, their seq_lens stay 0).
     n_steps: scalar int32 *dynamic* trip count <= max_horizon — the host
             dispatches exactly ``steps_until_boundary`` steps without a
             recompile (lax.fori_loop lowers to a while loop).
-    key:    PRNG key; split once per step exactly like the legacy host
-            loop, so sampled outputs match it step for step.
 
     Returns (out_tokens [max_horizon, B] i32 — rows >= n_steps are zero,
-    new state, new key). Jit with ``donate_argnums`` on ``state`` so the
+    new state). Jit with ``donate_argnums`` on ``state`` so the
     [L, NB, BS, KV, D] pools update in place instead of being copied
     every token.
     """
@@ -380,19 +384,20 @@ def decode_megastep(cfg: ModelConfig, params: Params,
     active_i = active.astype(jnp.int32)
 
     def body(t, carry):
-        state, toks, key, out = carry
+        state, toks, out = carry
         logits, state = decode_step(cfg, params, state, toks, ctx, rt)
-        key, sk = jax.random.split(key)
-        nxt = sample_device(logits, sk, temps)
+        nxt = sample_from_logits(logits, sampling["keys"],
+                                 sampling["counts"] + t, sampling["temps"],
+                                 sampling["top_ks"], sampling["top_ps"])
         nxt = jnp.where(active, nxt, toks)
         state = dict(state)
         state["seq_lens"] = state["seq_lens"] + active_i
         out = out.at[t].set(jnp.where(active, nxt, 0))
-        return (state, nxt, key, out)
+        return (state, nxt, out)
 
-    state, _, key, out = jax.lax.fori_loop(
-        0, n_steps, body, (state, tokens, key, out))
-    return out, state, key
+    state, _, out = jax.lax.fori_loop(
+        0, n_steps, body, (state, tokens, out))
+    return out, state
 
 
 def prefill(cfg: ModelConfig, params: Params, state: Dict[str, jnp.ndarray],

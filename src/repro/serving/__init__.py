@@ -1,0 +1,17 @@
+"""Serving layer public surface.
+
+New code::
+
+    from repro.serving import LLM, SamplingParams, RequestOutput
+
+Deprecated (one-release shim)::
+
+    from repro.serving import ServingEngine, Request
+"""
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.llm import LLM
+from repro.serving.params import RequestOutput, SamplingParams
+from repro.serving.scheduler import RequestState, Scheduler, Sequence
+
+__all__ = ["LLM", "SamplingParams", "RequestOutput", "ServingEngine",
+           "Request", "RequestState", "Scheduler", "Sequence"]

@@ -1,68 +1,66 @@
-"""Continuous-batching serving engine (the vLLM role in the paper).
+"""Continuous-batching serving engine facade (the vLLM role in the paper).
 
-Dynamic scheduling happens in Python; the *device step* is static-shape
-(padded slot arrays) so XLA never recompiles:
+The engine is a thin conductor over two halves:
 
-* fixed ``max_slots`` decode slots; a slot holds one running sequence,
-* paged KV blocks come from the ref-counted ``BlockAllocator``
-  (prefix reuse + copy-on-write, paper §III.C "cache sharing and reuse"),
-* admission: prompts are prefilled (padded to a bucket length) when enough
-  free blocks exist (watermark), else queued; decode preempts nothing —
-  out-of-blocks preempts the *youngest* sequence back to the queue
-  (recompute-style preemption, like vLLM),
-* metrics match the paper's Fig. 2: latency, all-throughput (req/s,
-  tok/s), generation throughput (tok/s).
+* ``serving.scheduler.Scheduler`` — pure host policy: admission
+  (watermark + prompt clamping), slot/block accounting, recompute-style
+  preemption, capacity force-finishing, fused-horizon planning;
+* ``serving.model_runner.ModelRunner`` — the device: paged KV pools,
+  jitted prefill / per-token decode / fused megastep, CoW block copies,
+  on-device per-slot sampling.
 
-Decode fast path (``use_fused=True``, the default): instead of one jitted
-call + one blocking host sync per generated token, the engine dispatches a
-fused **decode megastep** — a single buffer-donated device call that runs
-KV scatter + paged attention + logits + sampling for up to ``max_horizon``
-tokens (``lax.fori_loop`` with a *dynamic* trip count, so no recompiles).
-The host plans ``steps_until_boundary`` = min over running sequences of
-(tokens remaining, horizon cap), pre-allocates every KV block the horizon
-will touch (copy-on-write resolved by a device-side block copy, never via
-host numpy), dispatches exactly that many fused steps, and reads back one
-``[horizon, slots]`` token buffer — a single host↔device round trip per
-horizon. The legacy per-token loop is kept (``use_fused=False``) as the
-bitwise-equivalence oracle and bench baseline.
+Requests enter with a ``SamplingParams`` (temperature / top_k / top_p /
+seed / stop token ids / max_tokens) that is lowered to padded per-slot
+device arrays, so one batch freely mixes greedy, temperature and
+top-k/top-p requests — through *both* the legacy per-token loop
+(``use_fused=False``, the bitwise-equivalence oracle) and the fused
+decode megastep (default; one buffer-donated device call per multi-token
+horizon, one host↔device round trip per dispatch).
+
+Results stream back as ``RequestOutput`` deltas: ``step()`` returns the
+events produced by that iteration and ``stream()`` yields them as
+horizons complete, so callers see tokens long before the batch drains —
+and ``add_request`` / ``add`` may be called while streaming (continuous
+intake). ``run_until_done`` is retained as the drain-everything driver.
+
+The pre-redesign surface — ``ServingEngine(cfg, params)`` plus the bare
+``Request(prompt, max_new_tokens, temperature)`` — keeps working as a
+deprecation shim for one release; new code should construct via
+``serving.llm.LLM`` and speak ``SamplingParams`` / ``RequestOutput``.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Dict, Iterator, List, Optional, Sequence as SeqT
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.paged_cache import (BlockAllocator, OutOfBlocksError,
-                                    copy_blocks)
-from repro.models import transformer as T
-from repro.serving.sampler import sample
+from repro.core.paged_cache import BlockAllocator
+from repro.serving.model_runner import ModelRunner
+from repro.serving.params import (FINISH_LENGTH, FINISH_STOP, RequestOutput,
+                                  SamplingParams)
+from repro.serving.scheduler import RequestState, Scheduler, Sequence
 
 
 @dataclass
 class Request:
+    """Deprecated pre-``SamplingParams`` request record (one-release shim).
+
+    Use ``engine.add(prompt, SamplingParams(...))`` instead; this maps
+    onto it via ``add_request`` and keeps filling ``output`` in place.
+    """
     rid: int
     prompt: List[int]
     max_new_tokens: int = 32
     temperature: float = 0.0
     arrival: float = 0.0
-    # filled by the engine
     output: List[int] = field(default_factory=list)
     first_token_t: Optional[float] = None
     done_t: Optional[float] = None
-
-
-@dataclass
-class _Seq:
-    req: Request
-    slot: int
-    block_ids: List[int]
-    seq_len: int                      # tokens in cache (incl. last fed)
-    last_token: int
 
 
 class ServingEngine:
@@ -70,356 +68,301 @@ class ServingEngine:
                  num_blocks: int = 512, max_blocks_per_seq: int = 64,
                  prefill_bucket: int = 64, rt: Optional[dict] = None,
                  seed: int = 0, use_fused: bool = True,
-                 max_horizon: int = 8):
+                 max_horizon: int = 8, detokenizer=None):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.mb = max_blocks_per_seq
         self.prefill_bucket = prefill_bucket
-        self.rt = dict(rt or {})
         self.use_fused = use_fused
         self.max_horizon = max(1, max_horizon)
-        self.alloc = BlockAllocator(
-            num_blocks, cfg.paging.block_size,
-            enable_prefix_reuse=cfg.paging.enable_prefix_reuse,
-            watermark_frac=cfg.paging.watermark_frac)
-        self.state = T.make_decode_state(cfg, max_slots, num_blocks, self.mb,
-                                         dtype=jnp.float32)
-        self.waiting: List[Request] = []
-        self.running: Dict[int, _Seq] = {}
-        self.finished: List[Request] = []
-        self.free_slots = list(range(max_slots - 1, -1, -1))
-        self.key = jax.random.PRNGKey(seed)
+        self.detokenizer = detokenizer
+        self.seed = seed
         self.metrics: Dict[str, float] = {
             "prompt_tokens": 0, "gen_tokens": 0, "preemptions": 0,
             "host_syncs": 0, "decode_dispatches": 0, "decode_steps": 0,
             "decode_time_s": 0.0, "truncated_prompts": 0,
             # dispatches after the first: excludes jit compile of the step
             "decode_warm_steps": 0, "decode_warm_time_s": 0.0}
-        self._t0: Optional[float] = None
         # sliding-window-only archs use a fixed ring cache: no block growth
-        self._ring_only = bool(cfg.sliding_window) and not any(
+        ring_only = bool(cfg.sliding_window) and not any(
             cfg.layer_kind(i) == "full" for i in range(cfg.num_layers))
-        # hard per-sequence KV capacity: the block table is mb entries wide
-        self._cap_tokens = self.mb * self.alloc.block_size
+        alloc = BlockAllocator(
+            num_blocks, cfg.paging.block_size,
+            enable_prefix_reuse=cfg.paging.enable_prefix_reuse,
+            watermark_frac=cfg.paging.watermark_frac)
+        self.scheduler = Scheduler(alloc, max_slots=max_slots,
+                                   max_blocks_per_seq=max_blocks_per_seq,
+                                   ring_only=ring_only, metrics=self.metrics)
+        self.runner = ModelRunner(cfg, params, max_slots=max_slots,
+                                  num_blocks=num_blocks,
+                                  max_blocks_per_seq=max_blocks_per_seq,
+                                  rt=rt, max_horizon=self.max_horizon)
+        self._t0: Optional[float] = None
+        self._next_rid = 0
 
-        self._prefill = jax.jit(
-            lambda p, s, b: T.prefill(cfg, p, s, b, None, self.rt))
-        self._decode = jax.jit(
-            lambda p, s, t: T.decode_step(cfg, p, s, t, None, self.rt))
-        # the fused megastep donates the whole decode state: the KV pools
-        # are updated in place instead of copied every token.
-        self._megastep = jax.jit(
-            lambda p, s, t, tm, a, n, k: T.decode_megastep(
-                cfg, p, s, t, tm, a, n, k,
-                max_horizon=self.max_horizon, ctx=None, rt=self.rt),
-            donate_argnums=(1,))
+    # ---------------------------------------------------- facade views
+    @property
+    def alloc(self) -> BlockAllocator:
+        return self.scheduler.alloc
+
+    @property
+    def waiting(self) -> List[RequestState]:
+        return self.scheduler.waiting
+
+    @property
+    def running(self) -> Dict[int, Sequence]:
+        return self.scheduler.running
+
+    @property
+    def finished(self) -> List[RequestState]:
+        return self.scheduler.finished
+
+    @property
+    def state(self):
+        return self.runner.state
+
+    @property
+    def rt(self) -> dict:
+        return self.runner.rt
 
     # ------------------------------------------------------------ intake
-    def add_request(self, req: Request) -> None:
-        req.arrival = time.perf_counter()
-        self.waiting.append(req)
+    def _base_key(self, rid: int, sp: SamplingParams) -> np.ndarray:
+        """Per-request PRNG stream root: explicit seed wins; otherwise a
+        stream derived from (engine seed, request id)."""
+        if sp.seed is not None:
+            k = jax.random.PRNGKey(sp.seed)
+        else:
+            k = jax.random.fold_in(jax.random.PRNGKey(self.seed), rid)
+        return np.asarray(k, np.uint32)
 
-    # ------------------------------------------------------------ admission
+    def add(self, prompt: SeqT[int],
+            sampling_params: Optional[SamplingParams] = None,
+            request_id: Optional[int] = None) -> int:
+        """Queue a request (allowed while running / streaming). Returns
+        the request id used in its ``RequestOutput`` events."""
+        sp = sampling_params or SamplingParams()
+        rid = self._next_rid if request_id is None else request_id
+        self._next_rid = max(self._next_rid, rid) + 1
+        rec = RequestState(rid=rid, prompt=list(prompt), sampling=sp,
+                           base_key=self._base_key(rid, sp))
+        self.scheduler.add(rec)
+        return rid
+
+    def add_request(self, req: Request) -> None:
+        """Deprecated: wrap a legacy ``Request``; its ``output`` list is
+        shared with the engine so old call sites keep reading results."""
+        warnings.warn(
+            "ServingEngine.add_request(Request(...)) is deprecated; use "
+            "engine.add(prompt, SamplingParams(...)) or serving.llm.LLM",
+            DeprecationWarning, stacklevel=2)
+        sp = SamplingParams(temperature=req.temperature,
+                            max_tokens=req.max_new_tokens)
+        rec = RequestState(rid=req.rid, prompt=req.prompt, sampling=sp,
+                           output=req.output, shim=req,
+                           base_key=self._base_key(req.rid, sp))
+        self._next_rid = max(self._next_rid, req.rid + 1)
+        self.scheduler.add(rec)
+        req.arrival = rec.arrival
+
+    # ------------------------------------------------------------ outputs
+    def _emit(self, req: RequestState, outs: List[RequestOutput]) -> None:
+        if req.shim is not None:     # legacy Request: mirror timestamps
+            req.shim.first_token_t = req.first_token_t
+            req.shim.done_t = req.done_t
+        new = list(req.output[req.emitted:])
+        finished = req.finish_reason is not None
+        if not new and not finished:
+            return
+        text = new_text = ""
+        if self.detokenizer is not None:
+            # incremental: only the delta is detokenized per event, the
+            # cumulative text accumulates on the request record
+            new_text = self.detokenizer(new) if new else ""
+            req.text += new_text
+            text = req.text
+        outs.append(RequestOutput(
+            request_id=req.rid, prompt_token_ids=req.prompt_token_ids,
+            token_ids=list(req.output), new_token_ids=new,
+            finished=finished, finish_reason=req.finish_reason,
+            text=text, new_text=new_text))
+        req.emitted = len(req.output)
+
+    def _absorb(self, s: Sequence, toks, now: float,
+                outs: List[RequestOutput]) -> None:
+        """Fold sampled tokens into a sequence, honouring stop token ids
+        and the max_tokens budget; finishing frees KV blocks immediately
+        (tokens past a stop are discarded). Emits the delta event."""
+        req = s.req
+        for tok in toks:
+            req.output.append(int(tok))
+            s.last_token = int(tok)
+            s.seq_len += 1
+            self.metrics["gen_tokens"] += 1
+            if req.first_token_t is None:
+                req.first_token_t = now
+            if int(tok) in req.sampling.stop:
+                self.scheduler.finish(s, FINISH_STOP)
+                break
+            if req.tokens_remaining() <= 0:
+                self.scheduler.finish(s, FINISH_LENGTH)
+                break
+        self._emit(req, outs)
+
+    # ------------------------------------------------------------ prefill
     def _bucket(self, n: int) -> int:
         b = self.prefill_bucket
-        return min(((n + b - 1) // b) * b, self.mb * self.alloc.block_size)
+        return min(((n + b - 1) // b) * b, self.scheduler.cap_tokens)
 
-    def _try_admit(self) -> None:
-        admitted: List[_Seq] = []
-        while self.waiting and self.free_slots:
-            req = self.waiting[0]
-            if len(req.prompt) > self._cap_tokens:
-                # prompt would overflow the mb-wide block table: clamp it
-                # instead of crashing the prefill scatter. An exactly-cap
-                # prompt still fits (it prefills, yields one token, then
-                # force-finishes), so requeued preempted sequences — whose
-                # prompt+output never exceeds cap — are never clamped and
-                # keep their full generated context.
-                req.prompt = req.prompt[:self._cap_tokens]
-                self.metrics["truncated_prompts"] += 1
-            need = (len(req.prompt) + self.alloc.block_size - 1) \
-                // self.alloc.block_size + 1
-            if not self.alloc.can_allocate(need):
-                break
-            self.waiting.pop(0)
-            block_ids, _reused = self.alloc.allocate_prompt(req.prompt)
-            slot = self.free_slots.pop()
-            seq = _Seq(req=req, slot=slot, block_ids=block_ids,
-                       seq_len=len(req.prompt), last_token=req.prompt[-1])
-            self.running[slot] = seq
-            admitted.append(seq)
-        if admitted:
-            self._run_prefill(admitted)
+    def _sampling_rows(self, recs: List[RequestState]) -> Dict[str, np.ndarray]:
+        """Stack per-request SamplingParams into padded device-ready rows."""
+        B = len(recs)
+        arr = {"keys": np.zeros((B, 2), np.uint32),
+               "counts": np.zeros((B,), np.int32),
+               "temps": np.zeros((B,), np.float32),
+               "top_ks": np.zeros((B,), np.int32),
+               "top_ps": np.ones((B,), np.float32)}
+        for i, r in enumerate(recs):
+            if r is None:
+                continue
+            arr["keys"][i] = r.base_key
+            arr["counts"][i] = len(r.output)
+            arr["temps"][i] = r.sampling.temperature
+            arr["top_ks"][i] = r.sampling.top_k
+            arr["top_ps"][i] = r.sampling.top_p
+        return arr
 
-    def _run_prefill(self, seqs: List[_Seq]) -> None:
+    def _slot_sampling(self) -> Dict[str, np.ndarray]:
+        recs: List[Optional[RequestState]] = [None] * self.max_slots
+        for slot, s in self.scheduler.running.items():
+            recs[slot] = s.req
+        return self._sampling_rows(recs)
+
+    def _run_prefill(self, seqs: List[Sequence],
+                     outs: List[RequestOutput]) -> None:
         maxlen = self._bucket(max(s.seq_len for s in seqs))
-        B = len(seqs)
-        toks = np.zeros((B, maxlen), np.int32)
-        lens = np.zeros((B,), np.int32)
-        for i, s in enumerate(seqs):
-            toks[i, :s.seq_len] = s.req.prompt
-            lens[i] = s.seq_len
-        # temporary contiguous state for the prefill batch, then scatter
-        # into the live engine state at each sequence's slot/table.
-        sub = dict(self.state)
-        bt = np.zeros((B, self.mb), np.int32)
-        for i, s in enumerate(seqs):
-            bt[i, :len(s.block_ids)] = s.block_ids
-        sub["block_table"] = jnp.asarray(bt) if "block_table" in sub else None
-        sub = {k: v for k, v in sub.items() if v is not None}
-        # prefill writes pools in-place via the shared pool arrays: pools are
-        # engine-global, per-slot state rows are gathered/scattered below.
-        per_seq = {}
-        for k in ("ssm_h", "ssm_conv", "lru_h", "rec_conv"):
-            if k in sub:
-                per_seq[k] = sub[k][:, [s.slot for s in seqs]]
-                sub[k] = per_seq[k]
-        sub["seq_lens"] = jnp.asarray(lens)
-        batch = {"tokens": jnp.asarray(toks), "ctx_lens": jnp.asarray(lens)}
-        logits, sub = self._prefill(self.params, sub, batch)
-        # scatter updated state back
-        for k in ("k_pool", "v_pool"):
-            if k in sub:
-                self.state[k] = sub[k]
-        for k in per_seq:
-            self.state[k] = self.state[k].at[:, [s.slot for s in seqs]].set(
-                sub[k])
-        self.metrics["prompt_tokens"] += int(lens.sum())
-        # first sampled token
-        self.key, sk = jax.random.split(self.key)
-        nxt = sample(logits, sk, [s.req.temperature for s in seqs])
+        logits = self.runner.prefill(seqs, maxlen)
+        self.metrics["prompt_tokens"] += sum(s.seq_len for s in seqs)
+        # first sampled token, per-request sampling streams
+        nxt = self.runner.sample(logits, self._sampling_rows(
+            [s.req for s in seqs]))
         self.metrics["host_syncs"] += 1
         now = time.perf_counter()
         for i, s in enumerate(seqs):
-            tok = int(nxt[i])
-            s.req.output.append(tok)
-            s.req.first_token_t = now
-            s.last_token = tok
-            s.seq_len += 1
-            self.metrics["gen_tokens"] += 1
-            self._maybe_finish(s)
-        # leave self.state consistent with the host bookkeeping (seq_lens /
-        # block_table rows for the slots just prefilled or freed) instead of
-        # relying on the next decode's _sync_tables.
-        self._sync_tables()
+            self._absorb(s, [int(nxt[i])], now, outs)
+        # leave device tables consistent with the host bookkeeping
+        # (slots just prefilled or freed) instead of relying on the next
+        # decode's sync.
+        self.runner.sync_tables(self.scheduler.running)
 
     # ------------------------------------------------------------ decode
-    def _sync_tables(self) -> None:
-        bt = np.zeros((self.max_slots, self.mb), np.int32)
-        sl = np.zeros((self.max_slots,), np.int32)
-        for slot, s in self.running.items():
-            bt[slot, :len(s.block_ids)] = s.block_ids
-            sl[slot] = s.seq_len
-        if "block_table" in self.state:
-            self.state["block_table"] = jnp.asarray(bt)
-        self.state["seq_lens"] = jnp.asarray(sl)
-
-    def _grow_blocks(self, s: _Seq, num_tokens: int = 1):
-        """Ensure KV capacity for the next ``num_tokens`` writes; returns
-        the (src, dst) CoW block pair (device copy pending) or None."""
-        if self._ring_only:
-            return None                          # ring cache: fixed blocks
-        pos = s.seq_len - 1                      # position the next write hits
-        s.block_ids, cow = self.alloc.grow(s.block_ids, pos, num_tokens)
-        return cow
-
-    def _writes_left(self, s: _Seq) -> int:
-        """Tokens the sequence can still decode before its block table is
-        full (next write position is seq_len - 1)."""
-        if self._ring_only:
-            return 10**9                         # ring slots wrap forever
-        return self._cap_tokens - (s.seq_len - 1)
-
-    def _finish_at_capacity(self) -> None:
-        """Force-finish sequences whose next KV write would overflow the
-        ``max_blocks_per_seq``-wide block table (output is truncated)."""
-        for slot in list(self.running):
-            if self._writes_left(self.running[slot]) <= 0:
-                self._finish(self.running[slot])
-
-    def step(self) -> None:
-        """One engine iteration: admit, then decode for all running —
-        a single token (legacy) or a fused multi-token horizon."""
-        if self._t0 is None:
-            self._t0 = time.perf_counter()
-        self._finish_at_capacity()       # free slots/blocks before admission
-        self._try_admit()
-        self._finish_at_capacity()       # a fresh exactly-cap prefill may
-        if not self.running:             # already be at the table boundary
-            return
-        if self.use_fused:
-            self._decode_fused()
-        else:
-            self._decode_legacy()
-
-    # -- legacy per-token loop (oracle + bench baseline) -----------------
-    def _decode_legacy(self) -> None:
-        t0 = time.perf_counter()
-        # grow block tables (may preempt on OOM; retry growth after a
-        # preemption frees blocks — otherwise this sequence would decode
-        # through a zero-padded block-table row and corrupt block 0)
-        for slot in sorted(self.running):
-            s = self.running.get(slot)
-            if s is None:                        # preempted earlier this pass
-                continue
-            cow = None
-            while slot in self.running:
-                try:
-                    cow = self._grow_blocks(s)
-                    break
-                except OutOfBlocksError:
-                    self._preempt_youngest()     # may preempt s itself
-            if slot not in self.running:
-                continue
-            if cow is not None:
-                self._copy_cow([cow])
-        if not self.running:
-            return
-        self._sync_tables()
-        toks = np.zeros((self.max_slots,), np.int32)
-        for slot, s in self.running.items():
-            toks[slot] = s.last_token
-        logits, self.state = self._decode(self.params, self.state,
-                                          jnp.asarray(toks))
-        self.key, sk = jax.random.split(self.key)
-        temps = [self.running[s].req.temperature if s in self.running else 0.0
-                 for s in range(self.max_slots)]
-        nxt = sample(logits, sk, temps)
-        self.metrics["host_syncs"] += 1
-        self.metrics["decode_dispatches"] += 1
-        self.metrics["decode_steps"] += 1
-        now = time.perf_counter()
-        for slot in list(self.running):
-            s = self.running[slot]
-            tok = int(nxt[slot])
-            s.req.output.append(tok)
-            s.last_token = tok
-            s.seq_len += 1
-            self.metrics["gen_tokens"] += 1
-            self._maybe_finish(s)
-        self._record_decode_time(time.perf_counter() - t0, 1)
-
     def _record_decode_time(self, dt: float, steps: int) -> None:
         self.metrics["decode_time_s"] += dt
         if self.metrics["decode_dispatches"] > 1:    # past the compile call
             self.metrics["decode_warm_time_s"] += dt
             self.metrics["decode_warm_steps"] += steps
 
-    # -- fused megastep path ---------------------------------------------
-    def _plan_horizon(self) -> int:
-        """steps_until_boundary: the longest horizon every running sequence
-        can decode without host intervention — bounded by tokens remaining
-        (finish boundary) and by free KV blocks (allocation boundary).
-        Preempts the youngest sequence if even a single step cannot fit."""
-        while self.running:
-            h = min(self.max_horizon,
-                    min(min(s.req.max_new_tokens - len(s.req.output),
-                            self._writes_left(s))
-                        for s in self.running.values()))
-            h = max(1, h)
-            if self._ring_only:
-                return h
-            while h >= 1:
-                need = sum(
-                    self.alloc.blocks_needed(s.block_ids, s.seq_len - 1, h)
-                    for s in self.running.values())
-                if need <= self.alloc.num_free:
-                    return h
-                h -= 1                   # linear: blocks_needed is monotone
-            self._preempt_youngest()
-        return 0
-
-    def _copy_cow(self, pairs) -> None:
-        """Resolve copy-on-write on device: block contents never visit the
-        host. pairs: [(src_block, dst_block), ...]. Padded to a fixed
-        ``max_slots`` length so ``copy_blocks`` compiles once, not once per
-        CoW batch size. Padding entries are self-copies of the first src
-        block: a pad index can never collide with a real dst (dst blocks
-        are freshly allocated, src blocks are still live), so the scatter
-        stays duplicate-free on every real destination."""
-        pad = (pairs[0][0],) * (self.max_slots - len(pairs))
-        src = np.asarray([p[0] for p in pairs] + list(pad), np.int32)
-        dst = np.asarray([p[1] for p in pairs] + list(pad), np.int32)
-        self.state["k_pool"] = copy_blocks(self.state["k_pool"], src, dst)
-        self.state["v_pool"] = copy_blocks(self.state["v_pool"], src, dst)
-
-    def _decode_fused(self) -> None:
-        t0 = time.perf_counter()
-        h = self._plan_horizon()
-        if not self.running or h == 0:
-            return
-        # pre-allocate every block the horizon touches; CoW via device copy
-        cow_pairs = []
-        for slot in sorted(self.running):
-            s = self.running[slot]
-            cow = self._grow_blocks(s, h)        # cannot raise: h was planned
-            if cow is not None:
-                cow_pairs.append(cow)
+    def _prepare_dispatch(self, horizon: int) -> int:
+        """Plan + pre-allocate one dispatch; returns the granted horizon
+        (0 if nothing is runnable after preemption)."""
+        h = self.scheduler.plan_horizon(horizon)
+        if not self.scheduler.running or h == 0:
+            return 0
+        cow_pairs = self.scheduler.grow_for_horizon(h)
         if cow_pairs:
-            self._copy_cow(cow_pairs)
-        self._sync_tables()
+            self.runner.copy_cow(cow_pairs)
+        self.runner.sync_tables(self.scheduler.running)
+        return h
+
+    def _decode_legacy(self, outs: List[RequestOutput]) -> None:
+        """Oracle path: one token per dispatch, host-side readback each
+        step — same planner, same sampling kernel as the fused path."""
+        t0 = time.perf_counter()
+        if self._prepare_dispatch(1) == 0:
+            return
         toks = np.zeros((self.max_slots,), np.int32)
-        temps = np.zeros((self.max_slots,), np.float32)
-        active = np.zeros((self.max_slots,), bool)
-        for slot, s in self.running.items():
+        for slot, s in self.scheduler.running.items():
             toks[slot] = s.last_token
-            temps[slot] = s.req.temperature
+        logits = self.runner.decode(toks)
+        nxt = self.runner.sample(logits, self._slot_sampling())
+        self.metrics["host_syncs"] += 1
+        self.metrics["decode_dispatches"] += 1
+        self.metrics["decode_steps"] += 1
+        now = time.perf_counter()
+        for slot in sorted(self.scheduler.running):
+            self._absorb(self.scheduler.running[slot], [int(nxt[slot])],
+                         now, outs)
+        self._record_decode_time(time.perf_counter() - t0, 1)
+
+    def _decode_fused(self, outs: List[RequestOutput]) -> None:
+        t0 = time.perf_counter()
+        h = self._prepare_dispatch(self.max_horizon)
+        if h == 0:
+            return
+        toks = np.zeros((self.max_slots,), np.int32)
+        active = np.zeros((self.max_slots,), bool)
+        for slot, s in self.scheduler.running.items():
+            toks[slot] = s.last_token
             active[slot] = True
-        out, self.state, self.key = self._megastep(
-            self.params, self.state, jnp.asarray(toks), jnp.asarray(temps),
-            jnp.asarray(active), jnp.int32(h), self.key)
-        out_np = np.asarray(out[:h])             # the ONE host sync
+        out_np = self.runner.megastep(toks, self._slot_sampling(), active, h)
         self.metrics["host_syncs"] += 1
         self.metrics["decode_dispatches"] += 1
         self.metrics["decode_steps"] += h
-        for slot in list(self.running):
-            s = self.running[slot]
-            for t in range(h):
-                tok = int(out_np[t, slot])
-                s.req.output.append(tok)
-                s.last_token = tok
-                s.seq_len += 1
-                self.metrics["gen_tokens"] += 1
-            self._maybe_finish(s)
+        now = time.perf_counter()
+        for slot in sorted(self.scheduler.running):
+            self._absorb(self.scheduler.running[slot],
+                         out_np[:, slot].tolist(), now, outs)
         self._record_decode_time(time.perf_counter() - t0, h)
 
-    def _finish(self, s: _Seq) -> None:
-        s.req.done_t = time.perf_counter()
-        self.finished.append(s.req)
-        self.alloc.free_sequence(s.block_ids)
-        del self.running[s.slot]
-        self.free_slots.append(s.slot)
-
-    def _maybe_finish(self, s: _Seq) -> None:
-        if len(s.req.output) >= s.req.max_new_tokens:
-            self._finish(s)
-
-    def _preempt_youngest(self) -> None:
-        slot = max(self.running,
-                   key=lambda sl: self.running[sl].req.arrival)
-        s = self.running.pop(slot)
-        self.alloc.free_sequence(s.block_ids)
-        self.free_slots.append(slot)
-        self.metrics["preemptions"] += 1
-        # recompute-style preemption: requeue with prompt+generated prefix
-        s.req.prompt = list(s.req.prompt) + list(s.req.output)
-        self.waiting.insert(0, s.req)
-
     # ------------------------------------------------------------ drive
+    def step(self) -> List[RequestOutput]:
+        """One engine iteration: admit, then decode for all running — a
+        single token (legacy) or a fused multi-token horizon. Returns the
+        ``RequestOutput`` deltas produced by this iteration."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        outs: List[RequestOutput] = []
+        for req in self.scheduler.finish_at_capacity():
+            self._emit(req, outs)    # free slots/blocks before admission
+        admitted = self.scheduler.try_admit()
+        if admitted:
+            self._run_prefill(admitted, outs)
+        for req in self.scheduler.finish_at_capacity():
+            self._emit(req, outs)    # a fresh exactly-cap prefill may
+        if not self.scheduler.running:  # already be at the table boundary
+            return outs
+        if self.use_fused:
+            self._decode_fused(outs)
+        else:
+            self._decode_legacy(outs)
+        return outs
+
+    def stream(self, max_steps: int = 100000) -> Iterator[RequestOutput]:
+        """Yield ``RequestOutput`` deltas as horizons complete — callers
+        see first tokens while the batch is still running, and may keep
+        calling ``add`` / ``add_request`` between events."""
+        steps = 0
+        while self.scheduler.has_work() and steps < max_steps:
+            yield from self.step()
+            steps += 1
+
     def run_until_done(self, max_steps: int = 10000) -> Dict[str, float]:
         steps = 0
-        while (self.waiting or self.running) and steps < max_steps:
+        while self.scheduler.has_work() and steps < max_steps:
             self.step()
             steps += 1
         return self.report()
 
     def report(self) -> Dict[str, float]:
-        """The paper's three numbers (+ fast-path counters)."""
+        """The paper's three numbers (+ fast-path and streaming counters)."""
         t1 = time.perf_counter()
         wall = max(t1 - (self._t0 or t1), 1e-9)
-        n = len(self.finished)
-        lat = float(np.mean([r.done_t - r.arrival for r in self.finished])) \
+        fin = self.scheduler.finished
+        n = len(fin)
+        lat = float(np.mean([r.done_t - r.arrival for r in fin])) \
+            if n else float("nan")
+        ttft = float(np.mean([r.first_token_t - r.arrival for r in fin
+                              if r.first_token_t is not None])) \
             if n else float("nan")
         total_toks = self.metrics["prompt_tokens"] + self.metrics["gen_tokens"]
         d_steps = max(self.metrics["decode_steps"], 1)
@@ -431,6 +374,7 @@ class ServingEngine:
             step_lat = self.metrics["decode_time_s"] / d_steps
         return {
             "latency_s": lat,
+            "ttft_s": ttft,
             "throughput_req_s": n / wall,
             "throughput_tok_s": total_toks / wall,
             "generate_tok_s": self.metrics["gen_tokens"] / wall,

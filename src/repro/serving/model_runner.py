@@ -1,0 +1,142 @@
+"""Device-side half of the serving engine: decode state + jitted calls.
+
+Owns the paged KV pools / SSM state pools, the jitted prefill /
+per-token decode / fused megastep executables, on-device sampling for the
+legacy loop, and the copy-on-write block copies.  It knows nothing about
+queues, slots-as-policy, or request lifecycles — the ``Scheduler`` does;
+the engine facade wires the two together.
+
+Buffer-donation invariant (see docs/PERF.md): the megastep donates the
+whole decode state, so after a fused dispatch the previous ``state``
+arrays are dead — always re-read ``runner.state``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence as Seq, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.paged_cache import copy_blocks
+from repro.core.sampling import sample_from_logits
+from repro.models import transformer as T
+
+
+class ModelRunner:
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
+                 num_blocks: int, max_blocks_per_seq: int,
+                 rt: Optional[dict] = None, max_horizon: int = 8,
+                 state_dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.mb = max_blocks_per_seq
+        self.rt = dict(rt or {})
+        self.max_horizon = max(1, max_horizon)
+        self.state = T.make_decode_state(cfg, max_slots, num_blocks, self.mb,
+                                         dtype=state_dtype)
+
+        self._prefill = jax.jit(
+            lambda p, s, b: T.prefill(cfg, p, s, b, None, self.rt))
+        self._decode = jax.jit(
+            lambda p, s, t: T.decode_step(cfg, p, s, t, None, self.rt))
+        # the fused megastep donates the whole decode state: the KV pools
+        # are updated in place instead of copied every token.
+        self._megastep = jax.jit(
+            lambda p, s, t, sp, a, n: T.decode_megastep(
+                cfg, p, s, t, sp, a, n,
+                max_horizon=self.max_horizon, ctx=None, rt=self.rt),
+            donate_argnums=(1,))
+        # legacy-loop sampling: the SAME per-slot kernel the megastep runs,
+        # jitted standalone so both paths are bitwise identical.
+        self._sample = jax.jit(sample_from_logits)
+
+    # ------------------------------------------------------------ tables
+    def sync_tables(self, running: Dict[int, "object"]) -> None:
+        """Rebuild seq_lens / block_table device rows from host truth."""
+        bt = np.zeros((self.max_slots, self.mb), np.int32)
+        sl = np.zeros((self.max_slots,), np.int32)
+        for slot, s in running.items():
+            bt[slot, :len(s.block_ids)] = s.block_ids
+            sl[slot] = s.seq_len
+        if "block_table" in self.state:
+            self.state["block_table"] = jnp.asarray(bt)
+        self.state["seq_lens"] = jnp.asarray(sl)
+
+    # ------------------------------------------------------------ prefill
+    def prefill(self, seqs: List["object"], maxlen: int) -> jnp.ndarray:
+        """Prefill a wave of admitted sequences (padded to ``maxlen``);
+        scatters pool / per-slot state rows back into the live engine
+        state and returns last-token logits [len(seqs), V]."""
+        B = len(seqs)
+        toks = np.zeros((B, maxlen), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, s in enumerate(seqs):
+            toks[i, :s.seq_len] = s.req.prompt
+            lens[i] = s.seq_len
+        # temporary contiguous state for the prefill batch, then scatter
+        # into the live engine state at each sequence's slot/table.
+        sub = dict(self.state)
+        bt = np.zeros((B, self.mb), np.int32)
+        for i, s in enumerate(seqs):
+            bt[i, :len(s.block_ids)] = s.block_ids
+        sub["block_table"] = jnp.asarray(bt) if "block_table" in sub else None
+        sub = {k: v for k, v in sub.items() if v is not None}
+        # prefill writes pools in-place via the shared pool arrays: pools
+        # are engine-global, per-slot state rows are gathered/scattered.
+        per_seq = {}
+        for k in ("ssm_h", "ssm_conv", "lru_h", "rec_conv"):
+            if k in sub:
+                per_seq[k] = sub[k][:, [s.slot for s in seqs]]
+                sub[k] = per_seq[k]
+        sub["seq_lens"] = jnp.asarray(lens)
+        batch = {"tokens": jnp.asarray(toks), "ctx_lens": jnp.asarray(lens)}
+        logits, sub = self._prefill(self.params, sub, batch)
+        for k in ("k_pool", "v_pool"):
+            if k in sub:
+                self.state[k] = sub[k]
+        for k in per_seq:
+            self.state[k] = self.state[k].at[:, [s.slot for s in seqs]].set(
+                sub[k])
+        return logits
+
+    # ------------------------------------------------------------ decode
+    def decode(self, tokens: np.ndarray) -> jnp.ndarray:
+        """One per-token decode step for all slots; tokens: [max_slots]."""
+        logits, self.state = self._decode(self.params, self.state,
+                                          jnp.asarray(tokens))
+        return logits
+
+    def megastep(self, tokens: np.ndarray, sampling: Dict[str, np.ndarray],
+                 active: np.ndarray, n_steps: int) -> np.ndarray:
+        """Dispatch one fused horizon; returns the [n_steps, max_slots]
+        token buffer as numpy (the ONE host sync of the dispatch)."""
+        sp = {k: jnp.asarray(v) for k, v in sampling.items()}
+        out, self.state = self._megastep(
+            self.params, self.state, jnp.asarray(tokens), sp,
+            jnp.asarray(active), jnp.int32(n_steps))
+        return np.asarray(out[:n_steps])
+
+    def sample(self, logits, sampling: Dict[str, np.ndarray]) -> np.ndarray:
+        """Per-slot sampling for the legacy loop / prefill first token."""
+        return np.asarray(self._sample(
+            logits, jnp.asarray(sampling["keys"]),
+            jnp.asarray(sampling["counts"]), jnp.asarray(sampling["temps"]),
+            jnp.asarray(sampling["top_ks"]), jnp.asarray(sampling["top_ps"])))
+
+    # ------------------------------------------------------------ CoW
+    def copy_cow(self, pairs: Seq[Tuple[int, int]]) -> None:
+        """Resolve copy-on-write on device: block contents never visit the
+        host. pairs: [(src_block, dst_block), ...]. Padded to a fixed
+        ``max_slots`` length so ``copy_blocks`` compiles once, not once per
+        CoW batch size. Padding entries are self-copies of the first src
+        block: a pad index can never collide with a real dst (dst blocks
+        are freshly allocated, src blocks are still live), so the scatter
+        stays duplicate-free on every real destination."""
+        pad = (pairs[0][0],) * (self.max_slots - len(pairs))
+        src = np.asarray([p[0] for p in pairs] + list(pad), np.int32)
+        dst = np.asarray([p[1] for p in pairs] + list(pad), np.int32)
+        self.state["k_pool"] = copy_blocks(self.state["k_pool"], src, dst)
+        self.state["v_pool"] = copy_blocks(self.state["v_pool"], src, dst)

@@ -1,9 +1,9 @@
-"""Token sampling: greedy / temperature / top-k.
+"""Token sampling: greedy / temperature / top-k / top-p.
 
-``sample_device`` (re-exported from ``repro.core.sampling``) is the
-jit-friendly core used inside the fused decode megastep; ``sample`` is the
-host-facing wrapper the prefill path (and legacy per-token decode loop)
-calls.
+``sample_from_logits`` (re-exported from ``repro.core.sampling``) is the
+jit-friendly per-slot core used by both the fused decode megastep and the
+legacy loop (via ``ModelRunner.sample``); ``sample`` is a host-facing
+convenience wrapper over the legacy single-key batch sampler.
 """
 from __future__ import annotations
 
@@ -12,9 +12,9 @@ from typing import Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sampling import sample_device
+from repro.core.sampling import sample_device, sample_from_logits
 
-__all__ = ["sample", "sample_device"]
+__all__ = ["sample", "sample_device", "sample_from_logits"]
 
 
 def sample(logits: jnp.ndarray, key, temperatures: Sequence[float],

@@ -1,0 +1,217 @@
+"""Host-side continuous-batching scheduler (no device, no jax arrays).
+
+Owns everything the engine decides *about* — admission (watermark +
+prompt clamping), slot assignment, block accounting against the
+ref-counted ``BlockAllocator``, recompute-style preemption, capacity
+force-finishing, and fused-horizon planning — and nothing the device
+computes.  ``ModelRunner`` owns the other half.  The split makes every
+scheduling policy unit-testable with a plain allocator and fake token
+lists (``tests/test_scheduler.py``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.paged_cache import BlockAllocator
+from repro.serving.params import FINISH_CAPACITY, SamplingParams
+
+
+@dataclass
+class RequestState:
+    """Internal per-request record (host bookkeeping, shared output list).
+
+    ``prompt`` is the *recompute* prompt: preemption folds generated
+    tokens into it so re-admission replays them through prefill.
+    ``prompt_len0`` keeps the original prompt length for reporting.
+    """
+    rid: int
+    prompt: List[int]
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    arrival: float = 0.0
+    output: List[int] = field(default_factory=list)
+    first_token_t: Optional[float] = None
+    done_t: Optional[float] = None
+    finish_reason: Optional[str] = None
+    emitted: int = 0               # tokens already surfaced via RequestOutput
+    folded: int = 0                # output tokens already folded into prompt
+    prompt_len0: int = 0
+    base_key: Optional[np.ndarray] = None   # [2] uint32 PRNG stream root
+    shim: Optional[object] = None  # legacy Request to mirror timestamps to
+    text: str = ""                 # detokenized output accumulated so far
+
+    @property
+    def prompt_token_ids(self) -> List[int]:
+        return self.prompt[:self.prompt_len0 or len(self.prompt)]
+
+    def tokens_remaining(self) -> int:
+        return self.sampling.max_tokens - len(self.output)
+
+
+@dataclass
+class Sequence:
+    """A running request bound to a decode slot + physical KV blocks."""
+    req: RequestState
+    slot: int
+    block_ids: List[int]
+    seq_len: int                   # tokens in cache (incl. last fed)
+    last_token: int
+
+
+class Scheduler:
+    """Admission / preemption / horizon planning over a fixed slot set.
+
+    Policies (unchanged from the monolithic engine):
+    * prompts longer than the per-sequence KV capacity are clamped at
+      admission (an exactly-cap prompt still prefills and yields one
+      token before force-finishing);
+    * admission is watermark-gated on free blocks, FIFO over ``waiting``;
+    * out-of-blocks preempts the *youngest* running sequence back to the
+      queue head with its generated tokens folded into the prompt
+      (recompute-style, like vLLM);
+    * ``plan_horizon`` returns steps-until-boundary: the longest horizon
+      every running sequence can decode without host intervention.
+    """
+
+    def __init__(self, alloc: BlockAllocator, *, max_slots: int,
+                 max_blocks_per_seq: int, ring_only: bool = False,
+                 metrics: Optional[Dict[str, float]] = None):
+        self.alloc = alloc
+        self.max_slots = max_slots
+        self.mb = max_blocks_per_seq
+        self.ring_only = ring_only
+        self.metrics = metrics if metrics is not None else {
+            "preemptions": 0, "truncated_prompts": 0}
+        self.waiting: List[RequestState] = []
+        self.running: Dict[int, Sequence] = {}
+        self.finished: List[RequestState] = []
+        self.free_slots = list(range(max_slots - 1, -1, -1))
+        # hard per-sequence KV capacity: the block table is mb entries wide
+        self.cap_tokens = self.mb * self.alloc.block_size
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # ------------------------------------------------------------ intake
+    def add(self, req: RequestState) -> None:
+        if not req.arrival:
+            req.arrival = time.perf_counter()
+        if not req.prompt_len0:
+            req.prompt_len0 = len(req.prompt)
+        self.waiting.append(req)
+
+    # ------------------------------------------------------------ admission
+    def try_admit(self) -> List[Sequence]:
+        """Admit FIFO while slots and (watermarked) blocks allow; returns
+        the newly admitted sequences — the caller must prefill them."""
+        admitted: List[Sequence] = []
+        while self.waiting and self.free_slots:
+            req = self.waiting[0]
+            if len(req.prompt) > self.cap_tokens:
+                # prompt would overflow the mb-wide block table: clamp it
+                # instead of crashing the prefill scatter. Requeued
+                # preempted sequences — whose prompt+output never exceeds
+                # cap — are never clamped and keep their full context.
+                req.prompt = req.prompt[:self.cap_tokens]
+                # keep prompt_token_ids == the prompt actually served, so
+                # a later preemption fold is never reported as prompt
+                req.prompt_len0 = min(req.prompt_len0, self.cap_tokens)
+                self.metrics["truncated_prompts"] += 1
+            need = (len(req.prompt) + self.alloc.block_size - 1) \
+                // self.alloc.block_size + 1
+            if not self.alloc.can_allocate(need):
+                break
+            self.waiting.pop(0)
+            block_ids, _reused = self.alloc.allocate_prompt(req.prompt)
+            slot = self.free_slots.pop()
+            seq = Sequence(req=req, slot=slot, block_ids=block_ids,
+                           seq_len=len(req.prompt), last_token=req.prompt[-1])
+            self.running[slot] = seq
+            admitted.append(seq)
+        return admitted
+
+    # ------------------------------------------------------------ capacity
+    def writes_left(self, s: Sequence) -> int:
+        """Tokens the sequence can still decode before its block table is
+        full (next write position is seq_len - 1)."""
+        if self.ring_only:
+            return 10 ** 9                        # ring slots wrap forever
+        return self.cap_tokens - (s.seq_len - 1)
+
+    def finish(self, s: Sequence, reason: str) -> RequestState:
+        s.req.done_t = time.perf_counter()
+        s.req.finish_reason = reason
+        self.finished.append(s.req)
+        self.alloc.free_sequence(s.block_ids)
+        del self.running[s.slot]
+        self.free_slots.append(s.slot)
+        return s.req
+
+    def finish_at_capacity(self) -> List[RequestState]:
+        """Force-finish sequences whose next KV write would overflow the
+        block table (output truncated, finish_reason "capacity")."""
+        done = []
+        for slot in list(self.running):
+            s = self.running[slot]
+            if self.writes_left(s) <= 0:
+                done.append(self.finish(s, FINISH_CAPACITY))
+        return done
+
+    # ------------------------------------------------------------ preemption
+    def preempt_youngest(self) -> RequestState:
+        slot = max(self.running,
+                   key=lambda sl: self.running[sl].req.arrival)
+        s = self.running.pop(slot)
+        self.alloc.free_sequence(s.block_ids)
+        self.free_slots.append(slot)
+        self.metrics["preemptions"] += 1
+        # recompute-style preemption: requeue with prompt+generated prefix.
+        # ``folded`` tracks how much of ``output`` a previous preemption
+        # already folded in, so a second preemption replaces that suffix
+        # instead of appending the generated tokens twice.
+        base = len(s.req.prompt) - s.req.folded
+        s.req.prompt = list(s.req.prompt[:base]) + list(s.req.output)
+        s.req.folded = len(s.req.output)
+        self.waiting.insert(0, s.req)
+        return s.req
+
+    # ------------------------------------------------------------ horizon
+    def plan_horizon(self, max_horizon: int) -> int:
+        """steps_until_boundary: the longest horizon every running sequence
+        can decode without host intervention — bounded by tokens remaining
+        (finish boundary) and by free KV blocks (allocation boundary).
+        Preempts the youngest sequence if even a single step cannot fit."""
+        while self.running:
+            h = min(max_horizon,
+                    min(min(s.req.tokens_remaining(), self.writes_left(s))
+                        for s in self.running.values()))
+            h = max(1, h)
+            if self.ring_only:
+                return h
+            while h >= 1:
+                need = sum(
+                    self.alloc.blocks_needed(s.block_ids, s.seq_len - 1, h)
+                    for s in self.running.values())
+                if need <= self.alloc.num_free:
+                    return h
+                h -= 1                   # linear: blocks_needed is monotone
+            self.preempt_youngest()
+        return 0
+
+    def grow_for_horizon(self, h: int) -> List[tuple]:
+        """Pre-allocate every KV block an ``h``-step horizon will touch
+        (cannot raise: ``plan_horizon`` budgeted it). Returns the CoW
+        (src, dst) block pairs the device must copy."""
+        cow_pairs = []
+        if self.ring_only:
+            return cow_pairs                     # ring cache: fixed blocks
+        for slot in sorted(self.running):
+            s = self.running[slot]
+            pos = s.seq_len - 1                  # position the next write hits
+            s.block_ids, cow = self.alloc.grow(s.block_ids, pos, h)
+            if cow is not None:
+                cow_pairs.append(cow)
+        return cow_pairs

@@ -1,0 +1,153 @@
+"""Host-side Scheduler unit tests: admission, watermark, clamping,
+horizon planning, preemption and capacity — no model, no device arrays."""
+import numpy as np
+import pytest
+
+from repro.core.paged_cache import BlockAllocator
+from repro.serving.params import SamplingParams
+from repro.serving.scheduler import RequestState, Scheduler, Sequence
+
+BS = 4
+
+
+def _sched(num_blocks=32, max_slots=3, mb=4, **kw):
+    alloc = BlockAllocator(num_blocks, BS, watermark_frac=0.0)
+    return Scheduler(alloc, max_slots=max_slots, max_blocks_per_seq=mb, **kw)
+
+
+def _req(rid, n_prompt, max_tokens=8, arrival=None):
+    r = RequestState(rid=rid, prompt=list(range(1, n_prompt + 1)),
+                     sampling=SamplingParams(max_tokens=max_tokens))
+    r.arrival = float(rid + 1 if arrival is None else arrival)
+    r.prompt_len0 = n_prompt
+    return r
+
+
+def test_admission_fifo_and_slot_bound():
+    s = _sched(max_slots=2)
+    for i in range(4):
+        s.add(_req(i, 6))
+    admitted = s.try_admit()
+    assert [q.req.rid for q in admitted] == [0, 1]   # FIFO, 2 slots
+    assert len(s.waiting) == 2 and len(s.running) == 2
+    assert all(q.seq_len == 6 and q.last_token == 6 for q in admitted)
+
+
+def test_admission_watermark_blocks():
+    # 4 blocks total; each 6-token prompt wants ceil(6/4)+1 = 3 blocks
+    alloc = BlockAllocator(4, BS, watermark_frac=0.5)   # watermark = 2
+    s = Scheduler(alloc, max_slots=4, max_blocks_per_seq=4)
+    s.add(_req(0, 6))
+    s.add(_req(1, 6))
+    admitted = s.try_admit()
+    assert admitted == []                    # 3 needed > 4 free - 2 watermark
+    assert len(s.waiting) == 2
+
+
+def test_overlong_prompt_clamped_at_admission():
+    s = _sched(mb=2)                         # cap = 2 * 4 = 8 tokens
+    s.add(_req(0, 20))
+    [q] = s.try_admit()
+    assert q.seq_len == 8 and len(q.req.prompt) == 8
+    assert s.metrics["truncated_prompts"] == 1
+    # prompt_token_ids reflects the prompt actually served, even after a
+    # preemption folds generated tokens into the recompute prompt
+    q.req.output.extend([50, 51])
+    q.seq_len += 2
+    s.preempt_youngest()
+    assert q.req.prompt_token_ids == list(range(1, 9))
+
+
+def test_plan_horizon_bounded_by_remaining_and_capacity():
+    s = _sched(mb=4)                         # cap = 16
+    s.add(_req(0, 6, max_tokens=20))
+    s.add(_req(1, 6, max_tokens=3))
+    for q in s.try_admit():
+        q.seq_len += 1                       # first sampled token absorbed
+    s.running[0].req.output.append(7)
+    s.running[1].req.output.append(7)
+    # finish boundary: rid 1 has 2 tokens left -> horizon 2
+    assert s.plan_horizon(8) == 2
+    s.running[1].req.output.extend([7, 7])   # now 0 left... but capacity
+    # writes_left: rid 0 seq_len 7 -> 16 - 6 = 10; horizon capped by caller
+    assert s.plan_horizon(4) == 1            # max(1, min(0, ...)) floor
+
+
+def test_plan_horizon_preempts_youngest_when_blocks_exhausted():
+    s = _sched(num_blocks=6, max_slots=2, mb=4)
+    s.add(_req(0, 8, arrival=1.0))           # 2 full blocks
+    r1 = _req(1, 8, arrival=2.0)
+    r1.prompt = list(range(101, 109))        # distinct: no prefix sharing
+    s.add(r1)                                # 2 more blocks
+    for q in s.try_admit():
+        q.seq_len += 1
+    # exhaust the pool so even one growth block cannot be found
+    held = [s.alloc._alloc_raw() for _ in range(s.alloc.num_free)]
+    h = s.plan_horizon(8)
+    assert s.metrics["preemptions"] >= 1
+    assert 1 not in s.running or 0 in s.running   # youngest (rid 1) evicted
+    # requeued at the head with prompt+output folded for recompute
+    assert s.waiting and s.waiting[0].rid == 1
+    for b in held:
+        s.alloc.free(b)
+    assert h >= 1 or not s.running
+
+
+def test_grow_for_horizon_returns_cow_pairs_for_shared_tail():
+    s = _sched(num_blocks=16, max_slots=2, mb=4)
+    ids, _ = s.alloc.allocate_prompt(list(range(6)))   # 1 full + 1 partial
+    fork = s.alloc.fork_sequence(ids)
+    r0, r1 = _req(0, 6), _req(1, 6)
+    s.running[0] = Sequence(req=r0, slot=0, block_ids=ids, seq_len=7,
+                            last_token=9)
+    s.running[1] = Sequence(req=r1, slot=1, block_ids=fork, seq_len=7,
+                            last_token=9)
+    cows = s.grow_for_horizon(1)             # both write at pos 6 (shared)
+    assert len(cows) == 1                    # first grow CoWs, second owns
+    src, dst = cows[0]
+    assert src == ids[-1]
+    assert s.running[0].block_ids[-1] != s.running[1].block_ids[-1]
+
+
+def test_finish_at_capacity_sets_reason_and_frees():
+    s = _sched(mb=2)                         # cap = 8
+    s.add(_req(0, 8, max_tokens=50))
+    [q] = s.try_admit()
+    q.seq_len += 1                           # next write pos = 8 == cap
+    free_before = s.alloc.num_free
+    done = s.finish_at_capacity()
+    assert [r.finish_reason for r in done] == ["capacity"]
+    assert not s.running and s.free_slots and s.alloc.num_free > free_before
+
+
+def test_preemption_requeues_with_generated_prefix():
+    s = _sched(max_slots=2)
+    s.add(_req(0, 5, arrival=1.0))
+    s.add(_req(1, 5, arrival=2.0))
+    for q in s.try_admit():
+        q.req.output.extend([100, 101])
+        q.seq_len += 2
+    s.preempt_youngest()
+    assert s.waiting[0].rid == 1
+    assert s.waiting[0].prompt == list(range(1, 6)) + [100, 101]
+    assert s.waiting[0].prompt_len0 == 5     # reporting keeps the original
+    assert s.metrics["preemptions"] == 1
+
+
+def test_double_preemption_does_not_duplicate_folded_tokens():
+    """A second preemption must *replace* the previously folded generated
+    suffix, not append the whole output again."""
+    s = _sched(max_slots=1)
+    s.add(_req(0, 4, max_tokens=20))
+    [q] = s.try_admit()
+    q.req.output.extend([10, 11])
+    q.seq_len += 2
+    s.preempt_youngest()
+    assert s.waiting[0].prompt == [1, 2, 3, 4, 10, 11]
+    [q] = s.try_admit()                      # re-admitted with folded prefix
+    q.req.output.append(12)
+    q.seq_len += 1
+    s.preempt_youngest()
+    assert s.waiting[0].prompt == [1, 2, 3, 4, 10, 11, 12]
+    assert s.waiting[0].output == [10, 11, 12]
+    assert s.waiting[0].prompt_len0 == 4
