@@ -9,8 +9,11 @@ the engine emits a request's first ``RequestOutput`` delta.
 
 ``table_fastpath`` quantifies the fused decode megastep against the legacy
 per-token loop on the same workload: per-engine-step decode latency,
-host↔device syncs per decode step, TTFT and generate throughput. Run as a
-module for smoke mode + JSON trajectory tracking::
+host↔device syncs per decode step, TTFT and generate throughput.
+``table_kv_memory`` records the quantized-KV trade: pool bytes and KV
+bytes per cached token for the dense vs int8 pool (``kvmem_bf16`` /
+``kvmem_int8`` rows), with the warm fused decode-step latency as the
+cost axis. Run as a module for smoke mode + JSON trajectory tracking::
 
     PYTHONPATH=src python -m benchmarks.bench_serving --smoke \
         --json BENCH_serving.json \
@@ -35,10 +38,11 @@ from repro.serving import SamplingParams, ServingEngine
 
 
 def _run_engine(cfg, params, seed=0, *, n_requests=12, max_tokens=8,
-                use_fused=True, max_horizon=8):
+                use_fused=True, max_horizon=8, kv_cache_dtype="bf16"):
     eng = ServingEngine(cfg, params, max_slots=4, num_blocks=256,
                         max_blocks_per_seq=16, prefill_bucket=32,
-                        use_fused=use_fused, max_horizon=max_horizon)
+                        use_fused=use_fused, max_horizon=max_horizon,
+                        kv_cache_dtype=kv_cache_dtype)
     rng = np.random.default_rng(seed)
     prefix = list(rng.integers(1, 200, 24))
     sp = SamplingParams(max_tokens=max_tokens)
@@ -111,6 +115,29 @@ def table_fastpath(smoke: bool = False) -> None:
              f"host_syncs={r['host_syncs']}")
 
 
+def table_kv_memory(smoke: bool = False) -> None:
+    """KV-cache memory: the same fused workload through the dense pool and
+    the int8 quantized pool. ``us_per_call`` is the warm fused decode-step
+    latency (the int8 path must stay close to the dense one); the derived
+    columns record the memory win — ``kv_pool_bytes`` / ``kv_bytes_per_tok``
+    drop ~2x vs bf16 pools and ~4x vs these f32 CPU pools, which is the
+    admissible-batch/context headroom the quantization buys."""
+    key = jax.random.PRNGKey(0)
+    cfg = get_reduced("qwen1.5-0.5b", num_layers=4, num_heads=8,
+                      num_kv_heads=2)
+    params = T.init_params(cfg, key)
+    n_req = 4 if smoke else 12
+    mnt = 12 if smoke else 64
+    for name in ("bf16", "int8"):
+        r = _run_engine(cfg, params, n_requests=n_req, max_tokens=mnt,
+                        kv_cache_dtype=name)
+        emit(f"kvmem_{name}", r["decode_step_latency_us"],
+             f"kv_pool_bytes={int(r['kv_pool_bytes'])};"
+             f"kv_bytes_per_tok={r['kv_bytes_per_token']:.1f};"
+             f"gen_tok_s={r['generate_tok_s']:.1f};"
+             f"ttft_ms={r['ttft_s'] * 1e3:.1f}")
+
+
 def assert_no_regression(rows, baseline_path: str, factor: float,
                          smoke: bool = False) -> None:
     """Warm fused decode-step latency must stay within ``factor`` x the
@@ -170,6 +197,7 @@ def run(smoke: bool = False) -> None:
     table_fig2(smoke)
     table_fig3(smoke)
     table_fastpath(smoke)
+    table_kv_memory(smoke)
 
 
 def main() -> None:

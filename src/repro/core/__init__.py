@@ -5,6 +5,11 @@ from repro.core.alibi import alibi_bias, alibi_slopes
 from repro.core.gqa import decode_attention, grouped_attention, mha_attention
 from repro.core.grouping import convert_mha_to_gqa, cluster_heads, head_similarity
 from repro.core.gptq import HessianAccumulator, gptq_quantize, rtn_quantize, quant_error
+from repro.core.kv_quant import (KVCache, copy_blocks_quant,
+                                 dequantize_blocks, gather_kv_quant,
+                                 make_kv_pool_quant, quantize_blocks,
+                                 write_decode_kv_quant,
+                                 write_prefill_kv_quant)
 from repro.core.paged_cache import (BlockAllocator, OutOfBlocksError,
                                     gather_kv, make_kv_pool, make_state_pool,
                                     write_decode_kv, write_prefill_kv)

@@ -1,0 +1,302 @@
+"""Quantized paged KV cache: int8 block pool + per-block-per-head scales.
+
+The paper's thesis is that *combining* quantization with paging memory
+management is what buys serving headroom; the GPTQ side only quantizes
+weights.  This module quantizes the other big HBM consumer — the paged
+KV pool — to symmetric per-block-per-head int8:
+
+* values pool ``[L, NB, BS, KV, D]`` int8 (vs bf16/f32), and
+* scales pool ``[L, NB, KV]`` f32 — ONE scale per (block, kv head),
+  covering all ``BS`` tokens × ``D`` dims of that head's tile,
+
+so KV bytes per cached token drop ~2x vs bf16 (~4x vs the f32 CPU pools)
+with a ``2 * L * KV * 4 / BS`` bytes/token scales overhead.  Reads
+dequantize in-register: the Pallas decode kernel
+(``kernels/paged_attention_quant.py``) multiplies each int8 K/V tile by
+its scale inside the online-softmax loop — the quantized cache is never
+materialized densely (TurboAttention, arXiv 2412.08585; MILLION, arXiv
+2504.03661).
+
+Write discipline (what keeps one scale per block sound):
+
+* a *fresh* block is quantized from exactly the tokens written into it,
+  junk slots masked to zero so stale garbage can never inflate the scale;
+* an *appending* write (decode, or a chunked-prefill boundary block)
+  dequantizes the block's live prefix, merges the new tokens, and
+  requantizes the whole block with the recomputed amax.  When the scale
+  is unchanged this is exact (``round(q) == q``); when it grows, existing
+  values pick up at most half a quantization step — bounded drift, and
+  bit-identical between the fused megastep and the legacy loop because
+  both run this same op;
+* copy-on-write (``copy_blocks_quant``) copies the scale row with the
+  value block, so forks keep decoding correctly.
+
+Everything here is shape-compatible with ``core.paged_cache``: the same
+``BlockAllocator`` / block tables drive both pool formats, and the bf16
+ops remain the parity oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.paged_cache import (copy_blocks, gather_kv, write_decode_kv,
+                                    write_prefill_kv)
+
+INT8_MAX = 127.0
+# floor on amax before the /127: keeps all-zero blocks at scale ~1e-22
+# (dequant exactly 0) without 0/0 in the quantize divide.
+AMAX_FLOOR = 1e-20
+
+KV_CACHE_DTYPES = ("bf16", "int8")
+
+
+def normalize_kv_cache_dtype(kv_cache_dtype: Optional[str]) -> str:
+    """Accept None / "bf16" / "bfloat16" as the unquantized pool (its
+    element dtype stays whatever the runner picks) and "int8" as the
+    quantized one."""
+    if kv_cache_dtype in (None, "bf16", "bfloat16"):
+        return "bf16"
+    if kv_cache_dtype == "int8":
+        return "int8"
+    raise ValueError(f"unknown kv_cache_dtype {kv_cache_dtype!r}; "
+                     f"expected one of {KV_CACHE_DTYPES}")
+
+
+# --------------------------------------------------------------------------
+# The cache carried through the layer loops
+# --------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """K/V pools plus (optionally) their scale pools, as one pytree.
+
+    ``k``/``v``: [L, NB, BS, KV, D] — bf16/f32/fp8 in the unquantized
+    mode, int8 in the quantized one.  ``k_scale``/``v_scale``: [L, NB, KV]
+    f32 in int8 mode, ``None`` otherwise (None is an empty pytree, so the
+    same scan/shard_map plumbing carries both modes).
+    """
+    k: jnp.ndarray
+    v: jnp.ndarray
+    k_scale: Optional[jnp.ndarray] = None
+    v_scale: Optional[jnp.ndarray] = None
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    @property
+    def block_size(self) -> int:
+        return self.k.shape[2]
+
+    def nbytes(self) -> int:
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in (self.k, self.v, self.k_scale, self.v_scale)
+                   if a is not None)
+
+
+def cache_from_state(state) -> KVCache:
+    return KVCache(state["k_pool"], state["v_pool"],
+                   state.get("k_scales"), state.get("v_scales"))
+
+
+def cache_to_state(cache: KVCache) -> dict:
+    st = {"k_pool": cache.k, "v_pool": cache.v}
+    if cache.quantized:
+        st["k_scales"] = cache.k_scale
+        st["v_scales"] = cache.v_scale
+    return st
+
+
+def make_kv_pool_quant(num_layers: int, num_blocks: int, block_size: int,
+                       num_kv_heads: int, head_dim: int
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                  jnp.ndarray, jnp.ndarray]:
+    """(k_values, v_values [L,NB,BS,KV,D] int8, k_scales, v_scales
+    [L,NB,KV] f32)."""
+    vshape = (num_layers, num_blocks, block_size, num_kv_heads, head_dim)
+    sshape = (num_layers, num_blocks, num_kv_heads)
+    return (jnp.zeros(vshape, jnp.int8), jnp.zeros(vshape, jnp.int8),
+            jnp.zeros(sshape, jnp.float32), jnp.zeros(sshape, jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Quantize / dequantize primitives
+# --------------------------------------------------------------------------
+
+
+def quantize_blocks(x: jnp.ndarray, live: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-block-per-head int8 quantization.
+
+    x: [..., BS, KV, D] float; live: [..., BS] bool — slots outside the
+    mask are zeroed *before* the amax so junk can never inflate the scale
+    (and they quantize to exactly 0).  Returns (q int8 like x,
+    scales [..., KV] f32) with ``scale = amax / 127`` so the roundtrip
+    error of any live value is <= scale / 2.
+    """
+    xf = jnp.where(live[..., None, None], x.astype(jnp.float32), 0.0)
+    amax = jnp.max(jnp.abs(xf), axis=(-3, -1))                 # [..., KV]
+    scales = jnp.maximum(amax, AMAX_FLOOR) / INT8_MAX
+    q = jnp.round(xf / scales[..., None, :, None])
+    q = jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scales
+
+
+def dequantize_blocks(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """q: [..., BS, KV, D] int8, scales: [..., KV] -> f32 values."""
+    return q.astype(jnp.float32) * scales[..., None, :, None]
+
+
+# --------------------------------------------------------------------------
+# Quantize-on-write pool ops (int8 counterparts of core.paged_cache)
+# --------------------------------------------------------------------------
+
+
+def write_prefill_kv_quant(values: jnp.ndarray, scales: jnp.ndarray,
+                           layer, k: jnp.ndarray, block_table: jnp.ndarray,
+                           ctx_lens: jnp.ndarray, pos_offset: int = 0
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize a prompt (or prompt chunk) into the int8 pool.
+
+    values: [L, NB, BS, KV, D] int8; scales: [L, NB, KV] f32;
+    k: [B, S, KV, D] holding positions ``pos_offset + i``; only absolute
+    positions < ctx_lens are live.  Each touched block is quantized whole:
+    blocks starting at/after ``pos_offset`` are fresh (scale overwritten);
+    the one boundary block a chunked prefill appends into merges the
+    dequantized live prefix first.
+    """
+    B, S, KV, D = k.shape
+    NB, bs = values.shape[1], values.shape[2]
+    j0 = pos_offset // bs                      # first touched block (static)
+    nb = (pos_offset + S - 1) // bs - j0 + 1   # touched block count (static)
+    lead = pos_offset - j0 * bs                # live prefix rows in block j0
+
+    kpad = jnp.pad(k.astype(jnp.float32),
+                   ((0, 0), (lead, nb * bs - lead - S), (0, 0), (0, 0)))
+    buf = kpad.reshape(B, nb, bs, KV, D)
+    pos = (j0 * bs + jnp.arange(nb * bs)).reshape(nb, bs)
+    live = ((pos[None] >= pos_offset)
+            & (pos[None] < ctx_lens[:, None, None]))           # [B, nb, bs]
+
+    lp = values[layer]                                         # [NB,BS,KV,D]
+    ls = scales[layer]                                         # [NB,KV]
+    blk = block_table[:, j0:j0 + nb]                           # [B, nb]
+    if lead:
+        # chunk boundary: block j0 already holds this sequence's tokens at
+        # slots [0, lead) — dequantize and merge them before requantizing.
+        old = dequantize_blocks(lp[blk[:, 0]], ls[blk[:, 0]])  # [B,bs,KV,D]
+        old_live = ((jnp.arange(bs)[None] < lead)
+                    & (pos[0][None] < ctx_lens[:, None]))      # [B, bs]
+        buf = buf.at[:, 0].add(
+            jnp.where(old_live[..., None, None], old, 0.0))
+        live = live.at[:, 0].set(live[:, 0] | old_live)
+
+    q, sc = quantize_blocks(buf, live)
+    # a block is written iff it holds any live row; dead blocks (past a
+    # short sequence's context) route out of bounds and are dropped.
+    tgt = jnp.where(live.any(-1), blk, NB)                     # [B, nb]
+    lp = lp.at[tgt].set(q, mode="drop")
+    ls = ls.at[tgt].set(sc, mode="drop")
+    return values.at[layer].set(lp), scales.at[layer].set(ls)
+
+
+def write_decode_kv_quant(values: jnp.ndarray, scales: jnp.ndarray,
+                          layer, k_new: jnp.ndarray,
+                          block_table: jnp.ndarray, positions: jnp.ndarray
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Append one token per sequence to its (private, CoW-guaranteed) tail
+    block: dequantize the live prefix, insert the token, requantize the
+    block with the recomputed amax.  positions: [B] absolute position of
+    the new token; negative => inactive slot, write dropped.
+    """
+    B = k_new.shape[0]
+    NB, bs = values.shape[1], values.shape[2]
+    valid = positions >= 0
+    pos = jnp.maximum(positions, 0)
+    blk = jnp.take_along_axis(block_table, (pos // bs)[:, None],
+                              axis=1)[:, 0]                    # [B]
+    off = pos % bs                                             # [B]
+
+    lp = values[layer]
+    ls = scales[layer]
+    old = dequantize_blocks(lp[blk], ls[blk])                  # [B,bs,KV,D]
+    slot = jnp.arange(bs)[None, :]                             # [1, bs]
+    buf = jnp.where((slot < off[:, None])[..., None, None], old, 0.0)
+    buf = jnp.where((slot == off[:, None])[..., None, None],
+                    k_new[:, None].astype(jnp.float32), buf)
+    live = slot <= off[:, None]                                # [B, bs]
+    q, sc = quantize_blocks(buf, live)
+
+    tgt = jnp.where(valid, blk, NB)                            # OOB -> dropped
+    lp = lp.at[tgt].set(q, mode="drop")
+    ls = ls.at[tgt].set(sc, mode="drop")
+    return values.at[layer].set(lp), scales.at[layer].set(ls)
+
+
+def gather_kv_quant(values: jnp.ndarray, scales: jnp.ndarray, layer,
+                    block_table: jnp.ndarray, max_len: int,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    """Dequantizing counterpart of ``gather_kv`` (reference / chunked
+    prefill path): [B, max_len, KV, D] in ``dtype``."""
+    bs = values.shape[2]
+    nb = -(-max_len // bs)
+    blk = block_table[:, :nb]                                  # [B, nb]
+    x = dequantize_blocks(values[layer][blk], scales[layer][blk])
+    return x.reshape(blk.shape[0], nb * bs,
+                     *values.shape[3:])[:, :max_len].astype(dtype)
+
+
+def copy_blocks_quant(values: jnp.ndarray, scales: jnp.ndarray,
+                      src: jnp.ndarray, dst: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Copy-on-write for the quantized pool: the scale rows move with the
+    value blocks (a fork that dropped them would dequantize its shared
+    prefix with garbage)."""
+    return copy_blocks(values, src, dst), copy_blocks(scales, src, dst)
+
+
+# --------------------------------------------------------------------------
+# Mode-dispatching writes/reads over a KVCache (what the model layers call)
+# --------------------------------------------------------------------------
+
+
+def kv_write_prefill(cache: KVCache, layer, k, v, block_table, ctx_lens,
+                     pos_offset: int = 0) -> KVCache:
+    if cache.quantized:
+        kq, ks = write_prefill_kv_quant(cache.k, cache.k_scale, layer, k,
+                                        block_table, ctx_lens, pos_offset)
+        vq, vs = write_prefill_kv_quant(cache.v, cache.v_scale, layer, v,
+                                        block_table, ctx_lens, pos_offset)
+        return KVCache(kq, vq, ks, vs)
+    return cache._replace(
+        k=write_prefill_kv(cache.k, layer, k, block_table, ctx_lens,
+                           pos_offset=pos_offset),
+        v=write_prefill_kv(cache.v, layer, v, block_table, ctx_lens,
+                           pos_offset=pos_offset))
+
+
+def kv_write_decode(cache: KVCache, layer, k, v, block_table,
+                    positions) -> KVCache:
+    if cache.quantized:
+        kq, ks = write_decode_kv_quant(cache.k, cache.k_scale, layer, k,
+                                       block_table, positions)
+        vq, vs = write_decode_kv_quant(cache.v, cache.v_scale, layer, v,
+                                       block_table, positions)
+        return KVCache(kq, vq, ks, vs)
+    return cache._replace(
+        k=write_decode_kv(cache.k, layer, k, block_table, positions),
+        v=write_decode_kv(cache.v, layer, v, block_table, positions))
+
+
+def kv_gather(cache: KVCache, layer, block_table, max_len: int,
+              dtype) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if cache.quantized:
+        return (gather_kv_quant(cache.k, cache.k_scale, layer, block_table,
+                                max_len, dtype),
+                gather_kv_quant(cache.v, cache.v_scale, layer, block_table,
+                                max_len, dtype))
+    return (gather_kv(cache.k, layer, block_table, max_len).astype(dtype),
+            gather_kv(cache.v, layer, block_table, max_len).astype(dtype))

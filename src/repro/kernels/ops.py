@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.paged_attention import paged_attention as _paged_pallas
+from repro.kernels.paged_attention_quant import (
+    paged_attention_quant as _paged_quant_pallas)
 from repro.kernels.gptq_matmul import gptq_matmul as _gptq_pallas
 from repro.core.quant import PACK
 
@@ -58,6 +60,25 @@ def paged_attention(q, k_pool, v_pool, block_table, seq_lens,
     return _ref.paged_attention_ref(q, k_pool, v_pool, block_table, seq_lens,
                                     alibi_slopes=alibi_slopes,
                                     sliding_window=sliding_window)
+
+
+def paged_attention_quant(q, k_values, k_scales, v_values, v_scales,
+                          block_table, seq_lens, alibi_slopes=None, *,
+                          sliding_window=0,
+                          use_pallas: Optional[bool] = None,
+                          interpret: Optional[bool] = None):
+    """Decode attention over the int8 KV pool (per-block-per-head scales),
+    dequantizing inside the kernel instead of materializing bf16 pages."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _paged_quant_pallas(
+            q, k_values, k_scales, v_values, v_scales, block_table, seq_lens,
+            alibi_slopes, sliding_window=sliding_window,
+            interpret=(not _on_tpu()) if interpret is None else interpret)
+    return _ref.paged_attention_quant_ref(
+        q, k_values, k_scales, v_values, v_scales, block_table, seq_lens,
+        alibi_slopes=alibi_slopes, sliding_window=sliding_window)
 
 
 def quant_matmul(x: jnp.ndarray, params: Dict[str, jnp.ndarray], *,

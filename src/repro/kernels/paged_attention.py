@@ -38,10 +38,20 @@ def _clamp_live(i, seq_len, block_size):
 
 
 def _pa_kernel(block_tables_ref, seq_lens_ref,       # scalar prefetch (SMEM)
-               slopes_ref, q_ref, k_ref, v_ref, o_ref,
-               acc_ref, m_ref, l_ref, *,
+               slopes_ref, q_ref, *refs,
                block_size: int, num_pages: int, use_alibi: bool,
-               sliding_window: int):
+               sliding_window: int, quantized: bool = False):
+    """Shared online-softmax body for the bf16 and int8 decode kernels.
+
+    ``refs`` is (k, v, o, acc, m, l) in the dense mode and
+    (k, k_scale, v, v_scale, o, acc, m, l) when ``quantized`` — the int8
+    wrapper (``paged_attention_quant.py``) reuses this body so the
+    softmax loop can never diverge between the two pool formats.
+    """
+    if quantized:
+        k_ref, ks_ref, v_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = refs
+    else:
+        k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = refs
     b = pl.program_id(0)
     i = pl.program_id(2)
 
@@ -59,6 +69,10 @@ def _pa_kernel(block_tables_ref, seq_lens_ref,       # scalar prefetch (SMEM)
         q = q_ref[0, 0].astype(jnp.float32)           # [G, D]
         k = k_ref[0, :, 0, :].astype(jnp.float32)     # [BS, D]
         v = v_ref[0, :, 0, :].astype(jnp.float32)     # [BS, D]
+        if quantized:
+            # in-register dequant: int8 tile * the page's per-head scale
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
         scale = q.shape[-1] ** -0.5
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale

@@ -40,6 +40,26 @@ def paged_attention_ref(q, k_pool, v_pool, block_table, seq_lens, *,
                             sliding_window=sliding_window)
 
 
+def paged_attention_quant_ref(q, k_values, k_scales, v_values, v_scales,
+                              block_table, seq_lens, *,
+                              alibi_slopes=None, sliding_window=0):
+    """Decode attention over the int8 paged pool: dequantize the gathered
+    pages (per-block-per-head scales), then the same contiguous oracle.
+
+    q: [B, H, D]; k_values/v_values: [NB, BS, KV, D] int8 (single layer);
+    k_scales/v_scales: [NB, KV] f32; block_table: [B, MB]; seq_lens: [B].
+    """
+    from repro.core.kv_quant import gather_kv_quant
+    bs = k_values.shape[1]
+    max_len = block_table.shape[1] * bs
+    kc = gather_kv_quant(k_values[None], k_scales[None], 0, block_table,
+                         max_len)
+    vc = gather_kv_quant(v_values[None], v_scales[None], 0, block_table,
+                         max_len)
+    return decode_attention(q, kc, vc, seq_lens, alibi_slopes=alibi_slopes,
+                            sliding_window=sliding_window)
+
+
 def quant_matmul_ref(x: jnp.ndarray, params: Dict[str, jnp.ndarray]) -> jnp.ndarray:
     """W4A16 matmul oracle: dequantize then matmul."""
     return _qmm(x, params)

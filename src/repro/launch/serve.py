@@ -36,6 +36,11 @@ def main() -> None:
                     choices=["rtn-int4", "gptq-int4"],
                     help="serve int4 weights (Opt-GPTQ configuration): "
                          "RTN or Hessian-based GPTQ")
+    ap.add_argument("--kv-cache-dtype", default="bf16",
+                    choices=["bf16", "int8"],
+                    help="paged KV pool format: int8 quantizes K/V on "
+                         "write (per-block-per-head scales, ~2x lower KV "
+                         "bytes/token vs bf16)")
     ap.add_argument("--checkpoint", default=None,
                     help="Checkpointer directory to restore params from")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -56,7 +61,9 @@ def main() -> None:
             get_config(args.arch)
         overrides = dict(num_kv_heads=base.num_heads,
                          paging=PagingConfig(enable_prefix_reuse=False))
-    llm = LLM.load(args.arch, quant=args.quant, checkpoint=args.checkpoint,
+    llm = LLM.load(args.arch, quant=args.quant,
+                   kv_cache_dtype=args.kv_cache_dtype,
+                   checkpoint=args.checkpoint,
                    reduced=args.reduced, overrides=overrides,
                    seed=args.seed, max_slots=args.slots,
                    num_blocks=args.blocks, max_blocks_per_seq=16,
@@ -84,7 +91,9 @@ def main() -> None:
                               "finish_reason": out.finish_reason}))
     rep = llm.engine.report()
     mode = ("mha" if args.mha_baseline else "opt-gqa") + \
-        (f"+{args.quant}" if args.quant else "")
+        (f"+{args.quant}" if args.quant else "") + \
+        (f"+kv-{args.kv_cache_dtype}" if args.kv_cache_dtype != "bf16"
+         else "")
     print(json.dumps({"mode": mode, **{k: round(float(v), 4)
                                        for k, v in rep.items()}}, indent=1))
 

@@ -14,6 +14,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.alibi import alibi_slopes
+from repro.core.kv_quant import KVCache, kv_write_decode, kv_write_prefill
 from repro.kernels import ops
 from repro.models.layers import dense_init, linear, rope
 from repro.runtime.sharding import ParallelCtx, shard
@@ -94,13 +95,13 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jnp.ndarray,
 
 def attn_prefill(cfg: ModelConfig, p: Params, x: jnp.ndarray,
                  ctx: Optional[ParallelCtx], *, kind: str,
-                 k_pool, v_pool, layer: int, block_table, ctx_lens,
+                 cache: KVCache, layer: int, block_table, ctx_lens,
                  rt: Optional[dict] = None):
     """Prefill: attention over the prompt AND write K/V into the paged pool.
 
-    Returns (y, k_pool, v_pool). Pools: [L, NB, BS, KV, D].
+    Returns (y, cache). cache pools: [L, NB, BS, KV, D] (quantize-on-write
+    when the cache carries int8 values + scales).
     """
-    from repro.core.paged_cache import write_prefill_kv
     rt = rt or {}
     B, S, _ = x.shape
     positions = jnp.arange(S)
@@ -113,20 +114,20 @@ def attn_prefill(cfg: ModelConfig, p: Params, x: jnp.ndarray,
                                 sliding_window=win,
                                 use_pallas=rt.get("use_pallas"),
                                 interpret=rt.get("interpret"))
-    k_pool = write_prefill_kv(k_pool, layer, k, block_table, ctx_lens)
-    v_pool = write_prefill_kv(v_pool, layer, v, block_table, ctx_lens)
+    cache = kv_write_prefill(cache, layer, k, v, block_table, ctx_lens)
     B_, S_, H_, D_ = o.shape
     y = linear(o.reshape(B_, S_, H_ * D_), p["wo"], rt)
-    return y, k_pool, v_pool
+    return y, cache
 
 
 def attn_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
                 ctx: Optional[ParallelCtx], *, kind: str,
-                k_pool, v_pool, layer: int, block_table, seq_lens,
+                cache: KVCache, layer: int, block_table, seq_lens,
                 rt: Optional[dict] = None):
-    """One-token decode. x: [B, d]; pools [L, NB, BS, KV, D] (ring for SWA).
+    """One-token decode. x: [B, d]; cache pools [L, NB, BS, KV, D] (ring
+    for SWA; int8 values + [L, NB, KV] scales when quantized).
 
-    Returns (y [B, d], k_pool, v_pool).
+    Returns (y [B, d], cache).
 
     Under a mesh, the cache write + paged attention run inside a shard_map
     island manual over the dp axes: each dp shard owns its sequences' pool
@@ -140,42 +141,50 @@ def attn_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
     q, k, v = q[:, 0], k[:, 0], v[:, 0]                   # [B, H/KV, D]
 
     win = cfg.sliding_window if kind == "sliding" else 0
+    cache_leaves, cache_def = jax.tree.flatten(cache)
 
-    def island(q, k, v, k_pool, v_pool, block_table, seq_lens, layer):
-        return _decode_cache_attend(cfg, q, k, v, k_pool, v_pool,
+    def island(q, k, v, block_table, seq_lens, layer, *leaves):
+        o, c = _decode_cache_attend(cfg, q, k, v,
+                                    jax.tree.unflatten(cache_def, leaves),
                                     block_table, seq_lens, layer, win, rt)
+        return (o, *jax.tree.leaves(c))
 
     if ctx is not None and B % ctx.dp_size == 0 and ctx.dp_size > 1:
         dp = ctx.dp_axes
-        o, k_pool, v_pool = jax.shard_map(
+        # every cache leaf — value pool [L,NB,...] or scale pool [L,NB,KV]
+        # — shards over dp on the blocks dim.
+        leaf_specs = tuple(P(None, dp) for _ in cache_leaves)
+        o, *leaves = jax.shard_map(
             island, mesh=ctx.mesh,
-            in_specs=(P(dp), P(dp), P(dp), P(None, dp), P(None, dp),
-                      P(dp), P(dp), P()),
-            out_specs=(P(dp), P(None, dp), P(None, dp)),
+            in_specs=(P(dp), P(dp), P(dp), P(dp), P(dp), P(), *leaf_specs),
+            out_specs=(P(dp), *leaf_specs),
             axis_names=set(dp), check_vma=False,
-        )(q, k, v, k_pool, v_pool, block_table, seq_lens,
-          jnp.asarray(layer, jnp.int32))
+        )(q, k, v, block_table, seq_lens, jnp.asarray(layer, jnp.int32),
+          *cache_leaves)
+        cache = jax.tree.unflatten(cache_def, leaves)
     else:
-        o, k_pool, v_pool = island(q, k, v, k_pool, v_pool, block_table,
-                                   seq_lens, layer)
+        o, cache = _decode_cache_attend(cfg, q, k, v, cache, block_table,
+                                        seq_lens, layer, win, rt)
     y = linear(o.reshape(o.shape[0], -1), p["wo"], rt)
-    return y, k_pool, v_pool
+    return y, cache
 
 
-def _decode_cache_attend(cfg, q, k, v, k_pool, v_pool, block_table,
+def _decode_cache_attend(cfg, q, k, v, cache: KVCache, block_table,
                          seq_lens, layer, win, rt):
     """Local (per-dp-shard) cache write + attention; block ids are local."""
-    from repro.core.paged_cache import write_decode_kv
     if win > 0:
         # ring cache: slot = pos % cache_len; all cached tokens are the most
         # recent ones -> attend over valid slots, mask by window distance
-        # via the stored-position trick (DESIGN.md §5).
+        # via the stored-position trick (DESIGN.md §5). bf16-only: int8 KV
+        # is rejected for sliding archs at decode-state construction.
+        from repro.core.paged_cache import gather_kv, write_decode_kv
+        k_pool, v_pool = cache.k, cache.v
         cache_len = block_table.shape[1] * k_pool.shape[2]
         # inactive slots (seq_len == 0) get position -1 -> write dropped
         ring_pos = jnp.where(seq_lens > 0, (seq_lens - 1) % cache_len, -1)
         k_pool = write_decode_kv(k_pool, layer, k, block_table, ring_pos)
         v_pool = write_decode_kv(v_pool, layer, v, block_table, ring_pos)
-        from repro.core.paged_cache import gather_kv
+        cache = cache._replace(k=k_pool, v=v_pool)
         kc = gather_kv(k_pool, layer, block_table, cache_len)
         vc = gather_kv(v_pool, layer, block_table, cache_len)
         # absolute position of ring slot s for a sequence of length t:
@@ -189,16 +198,22 @@ def _decode_cache_attend(cfg, q, k, v, k_pool, v_pool, block_table,
         else:
             o = _ring_attention(q, kc, vc, valid)
     else:
-        k_pool = write_decode_kv(k_pool, layer, k, block_table, seq_lens - 1)
-        v_pool = write_decode_kv(v_pool, layer, v, block_table, seq_lens - 1)
+        cache = kv_write_decode(cache, layer, k, v, block_table, seq_lens - 1)
         if rt.get("skip_mixer_core"):
             o = q * (1 + 1e-30 * seq_lens.sum())
+        elif cache.quantized:
+            o = ops.paged_attention_quant(
+                q, cache.k[layer], cache.k_scale[layer],
+                cache.v[layer], cache.v_scale[layer],
+                block_table, seq_lens, _slopes(cfg),
+                use_pallas=rt.get("use_pallas"),
+                interpret=rt.get("interpret"))
         else:
-            o = ops.paged_attention(q, k_pool[layer], v_pool[layer],
+            o = ops.paged_attention(q, cache.k[layer], cache.v[layer],
                                     block_table, seq_lens, _slopes(cfg),
                                     use_pallas=rt.get("use_pallas"),
                                     interpret=rt.get("interpret"))
-    return o, k_pool, v_pool
+    return o, cache
 
 
 def _ring_attention(q, kc, vc, valid):

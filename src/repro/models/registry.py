@@ -37,28 +37,16 @@ def decode_geometry(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, int]:
 
 
 def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig,
-                       dtype=None) -> Dict[str, Any]:
-    dtype = dtype or jnp.dtype(cfg.paging.cache_dtype)
+                       dtype=None, kv_cache_dtype=None) -> Dict[str, Any]:
+    """Decode-state ShapeDtypeStructs for a dry-run cell — derived from
+    ``make_decode_state`` via eval_shape (no allocation) so the spec layer
+    can never diverge from the real state layout, including the int8
+    pool format and its sliding-window rejection."""
     g = decode_geometry(cfg, shape)
-    na, nr = T.attn_layer_count(cfg)
-    st: Dict[str, Any] = {"seq_lens": sds((g["max_seqs"],), I32)}
-    if na:
-        pool = (na, g["num_blocks"], g["block_size"], cfg.num_kv_heads,
-                cfg.resolved_head_dim)
-        st["k_pool"] = sds(pool, dtype)
-        st["v_pool"] = sds(pool, dtype)
-        st["block_table"] = sds((g["max_seqs"], g["max_blocks_per_seq"]), I32)
-    if cfg.family == "ssm":
-        din = cfg.ssm_expand * cfg.d_model
-        st["ssm_h"] = sds((cfg.num_layers, g["max_seqs"], din, cfg.ssm_state),
-                          jnp.float32)
-        st["ssm_conv"] = sds((cfg.num_layers, g["max_seqs"], din,
-                              cfg.ssm_conv - 1), dtype)
-    if cfg.family == "hybrid" and nr:
-        w = cfg.lru_width or cfg.d_model
-        st["lru_h"] = sds((nr, g["max_seqs"], w), jnp.float32)
-        st["rec_conv"] = sds((nr, g["max_seqs"], w, 3), dtype)
-    return st
+    return jax.eval_shape(
+        lambda: T.make_decode_state(cfg, g["max_seqs"], g["num_blocks"],
+                                    g["max_blocks_per_seq"], dtype=dtype,
+                                    kv_cache_dtype=kv_cache_dtype))
 
 
 def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:

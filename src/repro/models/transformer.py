@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.kv_quant import cache_from_state, cache_to_state
 from repro.core.sampling import sample_from_logits
 from repro.models import ssm as ssm_mod
 from repro.models.attention import (attn_apply, attn_decode, attn_init,
@@ -203,17 +204,41 @@ def attn_layer_count(cfg: ModelConfig) -> Tuple[int, int]:
 
 def make_decode_state(cfg: ModelConfig, max_seqs: int, num_blocks: int,
                       max_blocks_per_seq: int,
-                      dtype=None) -> Dict[str, jnp.ndarray]:
-    dtype = dtype if dtype is not None else jnp.dtype(cfg.paging.cache_dtype)
+                      dtype=None, kv_cache_dtype: Optional[str] = None
+                      ) -> Dict[str, jnp.ndarray]:
+    """``kv_cache_dtype="int8"`` builds the quantized pool format (int8
+    values + per-block-per-head f32 scales); the default keeps the dense
+    ``dtype`` pool (bf16/f32/fp8 via ``cfg.paging.cache_dtype``)."""
+    from repro.core.kv_quant import (make_kv_pool_quant,
+                                     normalize_kv_cache_dtype)
     from repro.core.paged_cache import make_kv_pool
+    kv_mode = normalize_kv_cache_dtype(kv_cache_dtype)
+    dtype = dtype if dtype is not None else jnp.dtype(cfg.paging.cache_dtype)
     na, nr = attn_layer_count(cfg)
+    if kv_mode == "int8" and not na:
+        raise ValueError(
+            f"kv_cache_dtype='int8' requested but {cfg.name} has no "
+            "attention KV cache to quantize (attention-free family "
+            f"{cfg.family!r}); drop the flag — SSM/recurrent state pools "
+            "are not paged KV")
     st: Dict[str, jnp.ndarray] = {
         "seq_lens": jnp.zeros((max_seqs,), jnp.int32),
     }
     if na:
         bs = cfg.paging.block_size
-        kp, vp = make_kv_pool(na, num_blocks, bs, cfg.num_kv_heads,
-                              cfg.resolved_head_dim, dtype)
+        if kv_mode == "int8":
+            if any(cfg.layer_kind(i) == "sliding"
+                   for i in range(cfg.num_layers)):
+                raise ValueError(
+                    "kv_cache_dtype='int8' does not support sliding-window "
+                    f"(ring-cache) attention layers ({cfg.name}); the ring "
+                    "overwrite pattern defeats per-block scale tracking")
+            kp, vp, ks, vs = make_kv_pool_quant(
+                na, num_blocks, bs, cfg.num_kv_heads, cfg.resolved_head_dim)
+            st.update(k_scales=ks, v_scales=vs)
+        else:
+            kp, vp = make_kv_pool(na, num_blocks, bs, cfg.num_kv_heads,
+                                  cfg.resolved_head_dim, dtype)
         st.update(k_pool=kp, v_pool=vp,
                   block_table=jnp.zeros((max_seqs, max_blocks_per_seq),
                                         jnp.int32))
@@ -248,42 +273,47 @@ def decode_step(cfg: ModelConfig, params: Params,
     homog = _is_homogeneous(cfg)
     kind0 = cfg.layer_kind(0)
 
-    pool_spec = None
+    pool_spec = scale_spec = None
     if ctx is not None:
         kv_tp = (ctx.tp_axis if ctx.tp_axis and
                  cfg.num_kv_heads % ctx.tp_size == 0 else None)
         pool_spec = P(None, ctx.dp_axes, None, kv_tp, None)
+        scale_spec = P(None, ctx.dp_axes, kv_tp)
 
-    def _pin_pools(kp, vp):
+    def _pin_cache(c):
         # keep the scan-carried pools sharded over dp between iterations —
         # without this GSPMD re-gathers the whole pool every layer.
-        if pool_spec is not None:
-            kp = shard(ctx, kp, pool_spec)
-            vp = shard(ctx, vp, pool_spec)
-        return kp, vp
+        if pool_spec is None:
+            return c
+        c = c._replace(k=shard(ctx, c.k, pool_spec),
+                       v=shard(ctx, c.v, pool_spec))
+        if c.quantized:
+            c = c._replace(k_scale=shard(ctx, c.k_scale, scale_spec),
+                           v_scale=shard(ctx, c.v_scale, scale_spec))
+        return c
 
     if homog and kind0 in ("full", "sliding") and rt.get("scan_layers", True):
         def body(carry, inp):
-            h, kp, vp = carry
+            h, cache = carry
             lp, li = inp
             hn = apply_norm(lp["attn_norm"], h, cfg.norm, cfg.norm_eps)
-            mix, kp, vp = attn_decode(
-                cfg, lp["attn"], hn, ctx, kind=kind0, k_pool=kp, v_pool=vp,
+            mix, cache = attn_decode(
+                cfg, lp["attn"], hn, ctx, kind=kind0, cache=cache,
                 layer=li, block_table=state["block_table"],
                 seq_lens=seq_lens, rt=rt)
-            kp, vp = _pin_pools(kp, vp)
+            cache = _pin_cache(cache)
             h = h + mix
             hn = apply_norm(lp["mlp_norm"], h, cfg.norm, cfg.norm_eps)
             if cfg.num_experts:
                 y = moe_apply(cfg, lp["moe"], hn[:, None, :], ctx, rt)[:, 0]
             else:
                 y = mlp_apply(lp["mlp"], hn, cfg.act, rt)
-            return (h + y, kp, vp), None
+            return (h + y, cache), None
 
-        (x, kp, vp), _ = jax.lax.scan(
-            body, (x, state["k_pool"], state["v_pool"]),
+        (x, cache), _ = jax.lax.scan(
+            body, (x, cache_from_state(state)),
             (params["layers"], jnp.arange(L)))
-        state["k_pool"], state["v_pool"] = kp, vp
+        state.update(cache_to_state(cache))
     elif homog and kind0 == "ssm" and rt.get("scan_layers", True):
         def body(carry, inp):
             h, hp, cp = carry
@@ -326,11 +356,11 @@ def decode_step(cfg: ModelConfig, params: Params,
                 state["rec_conv"] = state["rec_conv"].at[ri].set(cs)
                 ri += 1
             else:
-                mix, kp, vp = attn_decode(
+                mix, cache = attn_decode(
                     cfg, lp["attn"], hn, ctx, kind=kind,
-                    k_pool=state["k_pool"], v_pool=state["v_pool"], layer=ai,
+                    cache=cache_from_state(state), layer=ai,
                     block_table=state["block_table"], seq_lens=seq_lens, rt=rt)
-                state["k_pool"], state["v_pool"] = kp, vp
+                state.update(cache_to_state(cache))
                 ai += 1
             x = x + mix
             hn = apply_norm(lp["mlp_norm"], x, cfg.norm, cfg.norm_eps)
@@ -429,26 +459,26 @@ def prefill(cfg: ModelConfig, params: Params, state: Dict[str, jnp.ndarray],
             pf = attn_prefill_ring if kind0 == "sliding" else attn_prefill
 
             def body(carry, inp):
-                h, kp, vp = carry
+                h, cache = carry
                 lp, li = inp
                 hn = apply_norm(lp["attn_norm"], h, cfg.norm, cfg.norm_eps)
-                mix, kp, vp = pf(cfg, lp["attn"], hn, ctx, kind=kind0,
-                                 k_pool=kp, v_pool=vp, layer=li,
-                                 block_table=state["block_table"],
-                                 ctx_lens=ctx_lens, rt=rt)
+                mix, cache = pf(cfg, lp["attn"], hn, ctx, kind=kind0,
+                                cache=cache, layer=li,
+                                block_table=state["block_table"],
+                                ctx_lens=ctx_lens, rt=rt)
                 h = h + mix
                 hn = apply_norm(lp["mlp_norm"], h, cfg.norm, cfg.norm_eps)
                 if cfg.num_experts:
                     y = moe_apply(cfg, lp["moe"], hn, ctx, rt)
                 else:
                     y = mlp_apply(lp["mlp"], hn, cfg.act, rt)
-                return (h + y, kp, vp), None
+                return (h + y, cache), None
 
             body = jax.checkpoint(body, policy=rt.get("remat_policy"))
-            (x, kp, vp), _ = jax.lax.scan(
-                body, (x, state["k_pool"], state["v_pool"]),
+            (x, cache), _ = jax.lax.scan(
+                body, (x, cache_from_state(state)),
                 (params["layers"], jnp.arange(cfg.num_layers)))
-            state["k_pool"], state["v_pool"] = kp, vp
+            state.update(cache_to_state(cache))
         else:                                    # ssm
             def body(carry, inp):
                 h, hp, cp = carry
@@ -497,18 +527,12 @@ def prefill(cfg: ModelConfig, params: Params, state: Dict[str, jnp.ndarray],
                 state["rec_conv"].dtype))
             ri += 1
         else:
-            if kind == "sliding":
-                # ring cache: prefill writes the last cache_len tokens
-                mix, kp, vp = attn_prefill_ring(
-                    cfg, lp["attn"], hn, ctx, kind=kind,
-                    k_pool=state["k_pool"], v_pool=state["v_pool"], layer=ai,
-                    block_table=state["block_table"], ctx_lens=ctx_lens, rt=rt)
-            else:
-                mix, kp, vp = attn_prefill(
-                    cfg, lp["attn"], hn, ctx, kind=kind,
-                    k_pool=state["k_pool"], v_pool=state["v_pool"], layer=ai,
-                    block_table=state["block_table"], ctx_lens=ctx_lens, rt=rt)
-            state["k_pool"], state["v_pool"] = kp, vp
+            pf = attn_prefill_ring if kind == "sliding" else attn_prefill
+            mix, cache = pf(
+                cfg, lp["attn"], hn, ctx, kind=kind,
+                cache=cache_from_state(state), layer=ai,
+                block_table=state["block_table"], ctx_lens=ctx_lens, rt=rt)
+            state.update(cache_to_state(cache))
             ai += 1
         x = x + mix
         hn = apply_norm(lp["mlp_norm"], x, cfg.norm, cfg.norm_eps)
@@ -531,7 +555,7 @@ def _prefill_chunked(cfg: ModelConfig, params: Params, state, x, ctx_lens,
     the already-cached prefix back from the paged pool, so activation
     memory is O(chunk) instead of O(S). Full-attention homogeneous archs.
     """
-    from repro.core.paged_cache import gather_kv, write_prefill_kv
+    from repro.core.kv_quant import kv_gather, kv_write_prefill
     from repro.models.attention import _qkv, _slopes
     from repro.kernels import ops as kops
     B, S, d = x.shape
@@ -539,6 +563,7 @@ def _prefill_chunked(cfg: ModelConfig, params: Params, state, x, ctx_lens,
     state = dict(state)
     bt = state["block_table"]
     slopes = _slopes(cfg)
+    cache_def = jax.tree.structure(cache_from_state(state))
 
     B_ = x.shape[0]
     use_island = (ctx is not None and ctx.dp_size > 1
@@ -548,15 +573,16 @@ def _prefill_chunked(cfg: ModelConfig, params: Params, state, x, ctx_lens,
         ce = min(off + c, S)
         xc = x[:, off:ce]
 
-        def cache_attend(q, k, v, kp, vp, bt_l, cl_l, li, off=off, ce=ce):
+        def cache_attend(q, k, v, bt_l, cl_l, li, *leaves, off=off, ce=ce):
             """Per-dp-shard: write chunk K/V, gather cached prefix, attend.
             Local block ids; collective-free (DESIGN.md §4)."""
-            kp = write_prefill_kv(kp, li, k, bt_l, cl_l, pos_offset=off)
-            vp = write_prefill_kv(vp, li, v, bt_l, cl_l, pos_offset=off)
-            bs = kp.shape[2]
+            cache = jax.tree.unflatten(cache_def, leaves)
+            cache = kv_write_prefill(cache, li, k, v, bt_l, cl_l,
+                                     pos_offset=off)
+            bs = cache.block_size
             ce_b = min(((ce + bs - 1) // bs) * bs, bt_l.shape[1] * bs)
-            kc = gather_kv(kp, li, bt_l, ce_b)[:, :ce].astype(q.dtype)
-            vc = gather_kv(vp, li, bt_l, ce_b)[:, :ce].astype(q.dtype)
+            kc, vc = kv_gather(cache, li, bt_l, ce_b, q.dtype)
+            kc, vc = kc[:, :ce], vc[:, :ce]
             if rt.get("skip_mixer_core"):
                 o = q * (1 + 1e-30 * (kc.sum() + vc.sum()))
             else:
@@ -564,45 +590,48 @@ def _prefill_chunked(cfg: ModelConfig, params: Params, state, x, ctx_lens,
                     q, kc, vc, slopes, causal=True, q_offset=off,
                     use_pallas=rt.get("use_pallas"),
                     interpret=rt.get("interpret"))
-            return o, kp, vp
+            return (o, *jax.tree.leaves(cache))
 
         def body(carry, inp, off=off, ce=ce):
-            h, kp, vp = carry
+            h, cache = carry
             lp, li = inp
             hn = apply_norm(lp["attn_norm"], h, cfg.norm, cfg.norm_eps)
             q, k, v = _qkv(cfg, lp["attn"], hn,
                            off + jnp.arange(ce - off), ctx, rt)
+            leaves = jax.tree.leaves(cache)
             if use_island:
                 dp = ctx.dp_axes
-                o, kp, vp = jax.shard_map(
+                leaf_specs = tuple(P(None, dp) for _ in leaves)
+                o, *leaves = jax.shard_map(
                     cache_attend, mesh=ctx.mesh,
-                    in_specs=(P(dp), P(dp), P(dp), P(None, dp), P(None, dp),
-                              P(dp), P(dp), P()),
-                    out_specs=(P(dp), P(None, dp), P(None, dp)),
+                    in_specs=(P(dp), P(dp), P(dp), P(dp), P(dp), P(),
+                              *leaf_specs),
+                    out_specs=(P(dp), *leaf_specs),
                     axis_names=set(dp), check_vma=False,
-                )(q, k, v, kp, vp, bt, ctx_lens, li)
+                )(q, k, v, bt, ctx_lens, li, *leaves)
             else:
-                o, kp, vp = cache_attend(q, k, v, kp, vp, bt, ctx_lens, li)
+                o, *leaves = cache_attend(q, k, v, bt, ctx_lens, li, *leaves)
+            cache = jax.tree.unflatten(cache_def, leaves)
             h = h + linear(o.reshape(*o.shape[:2], -1), lp["attn"]["wo"], rt)
             hn = apply_norm(lp["mlp_norm"], h, cfg.norm, cfg.norm_eps)
             if cfg.num_experts:
                 y = moe_apply(cfg, lp["moe"], hn, ctx, rt)
             else:
                 y = mlp_apply(lp["mlp"], hn, cfg.act, rt)
-            return (h + y, kp, vp), None
+            return (h + y, cache), None
 
         body_r = jax.checkpoint(body, policy=rt.get("remat_policy"))
         if rt.get("scan_layers", True):
-            (xc, kp, vp), _ = jax.lax.scan(
-                body_r, (xc, state["k_pool"], state["v_pool"]),
+            (xc, cache), _ = jax.lax.scan(
+                body_r, (xc, cache_from_state(state)),
                 (params["layers"], jnp.arange(cfg.num_layers)))
         else:                    # unrolled (dry-run cost extrapolation)
-            carry = (xc, state["k_pool"], state["v_pool"])
+            carry = (xc, cache_from_state(state))
             for li in range(cfg.num_layers):
                 lp = jax.tree.map(lambda a: a[li], params["layers"])
                 carry, _ = body_r(carry, (lp, jnp.int32(li)))
-            xc, kp, vp = carry
-        state["k_pool"], state["v_pool"] = kp, vp
+            xc, cache = carry
+        state.update(cache_to_state(cache))
         x = x.at[:, off:ce].set(xc)        # final hidden states per chunk
 
     x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
@@ -611,11 +640,11 @@ def _prefill_chunked(cfg: ModelConfig, params: Params, state, x, ctx_lens,
     return logits.astype(jnp.float32), state
 
 
-def attn_prefill_ring(cfg, p, x, ctx, *, kind, k_pool, v_pool, layer,
+def attn_prefill_ring(cfg, p, x, ctx, *, kind, cache, layer,
                       block_table, ctx_lens, rt):
     """Sliding-window prefill: compute flash-SWA attention, then write each
-    token's K/V at ring slot pos % cache_len (later tokens overwrite)."""
-    from repro.core.paged_cache import write_prefill_kv
+    token's K/V at ring slot pos % cache_len (later tokens overwrite).
+    bf16-only: int8 KV is rejected for sliding archs at state creation."""
     from repro.models.attention import _qkv, _slopes
     from repro.kernels import ops as kops
     B, S, _ = x.shape
@@ -625,7 +654,7 @@ def attn_prefill_ring(cfg, p, x, ctx, *, kind, k_pool, v_pool, layer,
                              sliding_window=cfg.sliding_window,
                              use_pallas=rt.get("use_pallas"),
                              interpret=rt.get("interpret"))
-    cache_len = block_table.shape[1] * k_pool.shape[2]
+    cache_len = block_table.shape[1] * cache.k.shape[2]
     # keep only the last cache_len tokens per sequence: token at position p
     # lands at ring slot p % cache_len; older tokens in the same slot must
     # be dropped, so mask tokens with p < ctx_len - cache_len.
@@ -633,12 +662,13 @@ def attn_prefill_ring(cfg, p, x, ctx, *, kind, k_pool, v_pool, layer,
             & (positions[None] < ctx_lens[:, None]))
     # token at position p lands at ring slot p % cache_len; the keep window
     # spans at most cache_len positions, so slots are collision-free.
-    k_pool = _write_ring(k_pool, layer, k, block_table, positions, keep,
-                         cache_len)
-    v_pool = _write_ring(v_pool, layer, v, block_table, positions, keep,
-                         cache_len)
+    cache = cache._replace(
+        k=_write_ring(cache.k, layer, k, block_table, positions, keep,
+                      cache_len),
+        v=_write_ring(cache.v, layer, v, block_table, positions, keep,
+                      cache_len))
     y = linear(o.reshape(B, S, -1), p["wo"], rt)
-    return y, k_pool, v_pool
+    return y, cache
 
 
 def _write_ring(pool, layer, k, block_table, positions, keep, cache_len):

@@ -222,6 +222,8 @@ def state_shardings(ctx: Optional[ParallelCtx], state: Any, cfg) -> Any:
         s = v.shape
         if k in ("k_pool", "v_pool"):            # [L, NB, BS, KV, D]
             spec = P(None, dp_if(s[1]), None, tp_if(s[3]), None)
+        elif k in ("k_scales", "v_scales"):      # [L, NB, KV] (int8 KV mode)
+            spec = P(None, dp_if(s[1]), tp_if(s[2]))
         elif k == "block_table":                 # [B, MB]
             spec = P(dp_if(s[0]), None)
         elif k == "seq_lens":                    # [B]

@@ -68,7 +68,8 @@ class ServingEngine:
                  num_blocks: int = 512, max_blocks_per_seq: int = 64,
                  prefill_bucket: int = 64, rt: Optional[dict] = None,
                  seed: int = 0, use_fused: bool = True,
-                 max_horizon: int = 8, detokenizer=None):
+                 max_horizon: int = 8, detokenizer=None,
+                 kv_cache_dtype: str = "bf16"):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -97,7 +98,9 @@ class ServingEngine:
         self.runner = ModelRunner(cfg, params, max_slots=max_slots,
                                   num_blocks=num_blocks,
                                   max_blocks_per_seq=max_blocks_per_seq,
-                                  rt=rt, max_horizon=self.max_horizon)
+                                  rt=rt, max_horizon=self.max_horizon,
+                                  kv_cache_dtype=kv_cache_dtype)
+        self.kv_cache_dtype = self.runner.kv_cache_dtype
         self._t0: Optional[float] = None
         self._next_rid = 0
 
@@ -381,6 +384,9 @@ class ServingEngine:
             "preemptions": self.metrics["preemptions"],
             "block_utilization": self.alloc.utilization(),
             "blocks_reused": self.alloc.stats["reused"],
+            # pool memory: the figure kv_cache_dtype="int8" halves vs bf16
+            "kv_pool_bytes": self.runner.kv_pool_bytes(),
+            "kv_bytes_per_token": self.runner.kv_bytes_per_token(),
             "wall_s": wall,
             "host_syncs": self.metrics["host_syncs"],
             "decode_dispatches": self.metrics["decode_dispatches"],

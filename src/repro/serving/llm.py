@@ -56,6 +56,7 @@ class LLM:
     # ------------------------------------------------------------ builder
     @classmethod
     def load(cls, config_name: str, *, quant: Optional[str] = None,
+             kv_cache_dtype: str = "bf16",
              checkpoint: Optional[str] = None, reduced: bool = False,
              overrides: Optional[dict] = None, seed: int = 0,
              quant_group_size: int = 32, calib_batches: Optional[list] = None,
@@ -65,6 +66,11 @@ class LLM:
         quant:      None | "rtn-int4" (round-to-nearest int4 of every
                     matmul weight, any family) | "gptq-int4" (Hessian
                     OBQ over calibration data, dense-family models).
+        kv_cache_dtype: "bf16" (dense pool, the parity oracle) | "int8"
+                    (quantized paged KV pool: int8 values + per-block-
+                    per-head f32 scales, ~2x lower KV bytes/token vs
+                    bf16; greedy outputs match bf16 within quantization
+                    tolerance — see docs/API.md).
         checkpoint: a ``checkpoint.Checkpointer`` directory; the latest
                     step's ``params`` tree replaces the random init
                     (quantization, if any, runs after the restore).
@@ -113,7 +119,8 @@ class LLM:
             params = gptq_quantize_model(
                 cfg, params, calib,
                 QuantConfig(bits=4, group_size=quant_group_size))
-        return cls(cfg, params, seed=seed, **engine_kw)
+        return cls(cfg, params, seed=seed, kv_cache_dtype=kv_cache_dtype,
+                   **engine_kw)
 
     # ------------------------------------------------------------ serving
     @staticmethod

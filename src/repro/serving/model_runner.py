@@ -19,24 +19,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.kv_quant import normalize_kv_cache_dtype
 from repro.core.paged_cache import copy_blocks
 from repro.core.sampling import sample_from_logits
 from repro.models import transformer as T
+
+# decode-state entries that are pool-shaped [L, NB, ...] and therefore
+# owned globally by the engine (scattered whole, not per-slot)
+_POOL_KEYS = ("k_pool", "v_pool", "k_scales", "v_scales")
 
 
 class ModelRunner:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
                  num_blocks: int, max_blocks_per_seq: int,
                  rt: Optional[dict] = None, max_horizon: int = 8,
-                 state_dtype=jnp.float32):
+                 state_dtype=jnp.float32, kv_cache_dtype: str = "bf16"):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
+        self.num_blocks = num_blocks
         self.mb = max_blocks_per_seq
         self.rt = dict(rt or {})
         self.max_horizon = max(1, max_horizon)
+        self.kv_cache_dtype = normalize_kv_cache_dtype(kv_cache_dtype)
         self.state = T.make_decode_state(cfg, max_slots, num_blocks, self.mb,
-                                         dtype=state_dtype)
+                                         dtype=state_dtype,
+                                         kv_cache_dtype=self.kv_cache_dtype)
 
         self._prefill = jax.jit(
             lambda p, s, b: T.prefill(cfg, p, s, b, None, self.rt))
@@ -94,7 +102,7 @@ class ModelRunner:
         sub["seq_lens"] = jnp.asarray(lens)
         batch = {"tokens": jnp.asarray(toks), "ctx_lens": jnp.asarray(lens)}
         logits, sub = self._prefill(self.params, sub, batch)
-        for k in ("k_pool", "v_pool"):
+        for k in _POOL_KEYS:
             if k in sub:
                 self.state[k] = sub[k]
         for k in per_seq:
@@ -138,5 +146,21 @@ class ModelRunner:
         pad = (pairs[0][0],) * (self.max_slots - len(pairs))
         src = np.asarray([p[0] for p in pairs] + list(pad), np.int32)
         dst = np.asarray([p[1] for p in pairs] + list(pad), np.int32)
-        self.state["k_pool"] = copy_blocks(self.state["k_pool"], src, dst)
-        self.state["v_pool"] = copy_blocks(self.state["v_pool"], src, dst)
+        # int8 mode: the scale rows ride along with the value blocks —
+        # a fork that dropped them would dequantize its prefix with junk
+        for k in _POOL_KEYS:
+            if k in self.state:
+                self.state[k] = copy_blocks(self.state[k], src, dst)
+
+    # ------------------------------------------------------------ memory
+    def kv_pool_bytes(self) -> int:
+        """Device bytes held by the paged KV pools (values + scales)."""
+        return sum(int(self.state[k].size) * self.state[k].dtype.itemsize
+                   for k in _POOL_KEYS if k in self.state)
+
+    def kv_bytes_per_token(self) -> float:
+        """KV bytes per cached token position, across all attention layers
+        (scales amortized over the block): the figure the int8 pool halves
+        vs bf16 (~4x vs the f32 CPU pools)."""
+        bs = self.cfg.paging.block_size
+        return self.kv_pool_bytes() / float(self.num_blocks * bs)

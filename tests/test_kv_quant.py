@@ -1,0 +1,257 @@
+"""Quantized paged KV cache: roundtrip error bounds, quantize-on-write
+pool ops, CoW/fork scale carriage, the in-kernel-dequant paged-attention
+kernel, and end-to-end int8-vs-bf16 serving parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_reduced
+from repro.core.kv_quant import (KVCache, copy_blocks_quant,
+                                 dequantize_blocks, gather_kv_quant,
+                                 make_kv_pool_quant, normalize_kv_cache_dtype,
+                                 quantize_blocks, write_decode_kv_quant,
+                                 write_prefill_kv_quant)
+from repro.core.paged_cache import BlockAllocator
+from repro.models import transformer as T
+from repro.serving import LLM, SamplingParams
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------ roundtrip
+
+def test_roundtrip_error_bounded_by_half_scale():
+    """Property (random sweep): for any live value, |x - dq(q(x))| <=
+    scale/2 with scale = amax/127 per (block, head)."""
+    rng = np.random.default_rng(0)
+    for trial in range(25):
+        BS, KV, D = (int(rng.integers(1, 17)), int(rng.integers(1, 5)),
+                     int(rng.integers(1, 33)))
+        mag = 10.0 ** rng.uniform(-3, 3)
+        x = jnp.asarray(rng.normal(size=(4, BS, KV, D)) * mag, jnp.float32)
+        live = jnp.asarray(rng.random((4, BS)) < 0.8)
+        q, scales = quantize_blocks(x, live)
+        deq = dequantize_blocks(q, scales)
+        err = jnp.abs(jnp.where(live[..., None, None], x, 0.0) - deq)
+        # worst live element per (block, head) vs that head's scale bound
+        bound = (scales / 2 * (1 + 1e-5))[:, None, :, None]
+        assert bool(jnp.all(err <= bound)), f"trial {trial}"
+        # dead slots quantize to exactly 0
+        assert bool(jnp.all(jnp.where(live[..., None, None], 0, deq) == 0))
+
+
+def test_roundtrip_exact_on_int8_grid():
+    """Values already on the int8 grid (n * amax/127) survive exactly."""
+    rng = np.random.default_rng(1)
+    amax = 3.7
+    n = rng.integers(-127, 128, size=(2, 8, 2, 16))
+    n.flat[0] = 127                          # pin the amax so scale is known
+    x = jnp.asarray(n * (amax / 127.0), jnp.float32)
+    live = jnp.ones((2, 8), bool)
+    q, scales = quantize_blocks(x, live)
+    np.testing.assert_allclose(np.asarray(scales), amax / 127.0, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(q).astype(np.int64), n)
+    np.testing.assert_allclose(np.asarray(dequantize_blocks(q, scales)),
+                               np.asarray(x), rtol=1e-6)
+
+
+# ------------------------------------------------------------ pool writes
+
+def test_prefill_write_gather_roundtrip():
+    """write_prefill_kv_quant + gather_kv_quant reproduces the prompt K
+    within the per-block scale bound; junk beyond ctx_len never leaks."""
+    L, NB, BS, KV, D = 1, 8, 4, 2, 8
+    kq, vq, ks, vs = make_kv_pool_quant(L, NB, BS, KV, D)
+    del vq, vs
+    bt = jnp.asarray([[3, 5, 1], [2, 6, 0]], jnp.int32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 10, KV, D))
+    ctx = jnp.asarray([10, 6])
+    kq, ks = write_prefill_kv_quant(kq, ks, 0, k, bt, ctx)
+    g = gather_kv_quant(kq, ks, 0, bt, 10)
+    for b, n in enumerate([10, 6]):
+        ref = np.asarray(k[b, :n], np.float32)
+        err = np.abs(np.asarray(g[b, :n]) - ref)
+        # bound: half the per-block scale of the block each token is in
+        sc = np.asarray(ks[0])[np.asarray(bt[b])]          # [3, KV]
+        bound = sc[np.arange(n) // BS] / 2 * (1 + 1e-5)    # [n, KV]
+        assert (err <= bound[:, :, None]).all()
+        # beyond ctx_len the masked write produced exact zeros
+        assert (np.asarray(g[b, n:]) == 0).all()
+
+
+def test_prefill_chunked_boundary_merge():
+    """A pos_offset write into a half-filled block merges the existing
+    live prefix instead of zeroing it (the chunked-prefill boundary)."""
+    L, NB, BS, KV, D = 1, 4, 4, 1, 4
+    kq, vq, ks, vs = make_kv_pool_quant(L, NB, BS, KV, D)
+    del vq, vs
+    bt = jnp.asarray([[1, 2]], jnp.int32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 6, KV, D))
+    ctx = jnp.asarray([6])
+    # chunk 1: positions 0..1 (half of block 0); chunk 2: positions 2..5
+    kq, ks = write_prefill_kv_quant(kq, ks, 0, k[:, :2], bt, ctx)
+    kq, ks = write_prefill_kv_quant(kq, ks, 0, k[:, 2:], bt, ctx,
+                                    pos_offset=2)
+    g = gather_kv_quant(kq, ks, 0, bt, 6)
+    sc = float(np.asarray(ks[0]).max())
+    # the merge requantizes the prefix once, so allow 2 half-steps
+    np.testing.assert_allclose(np.asarray(g[0]), np.asarray(k[0], np.float32),
+                               atol=sc * 1.01)
+
+
+def test_decode_write_appends_and_rescales():
+    """Token-by-token decode writes keep every earlier token in the block
+    within the (possibly grown) scale bound; inactive slots are dropped."""
+    L, NB, BS, KV, D = 1, 4, 4, 2, 8
+    kq, vq, ks, vs = make_kv_pool_quant(L, NB, BS, KV, D)
+    del vq, vs
+    bt = jnp.asarray([[1, 3], [2, 0]], jnp.int32)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.normal(size=(6, 2, KV, D)) *
+                       (1 + np.arange(6))[:, None, None, None], jnp.float32)
+    for t in range(6):
+        pos = jnp.asarray([t, -1])               # seq 1 inactive throughout
+        kq, ks = write_decode_kv_quant(kq, ks, 0, toks[t], bt, pos)
+    g = gather_kv_quant(kq, ks, 0, bt, 6)
+    sc = np.asarray(ks[0])[np.asarray(bt[0])]                  # [2, KV]
+    for t in range(6):
+        err = np.abs(np.asarray(g[0, t]) - np.asarray(toks[t, 0], np.float32))
+        # growth requantization: <= 1 full step of the block's final scale
+        assert (err <= sc[t // BS][:, None] * 1.01).all(), t
+    # the inactive sequence's blocks were never touched
+    assert (np.asarray(kq[0])[np.asarray(bt[1])] == 0).all()
+
+
+def test_cow_fork_carries_scales():
+    """CoW after a fork copies the scale row with the value block — the
+    fork dequantizes its shared prefix identically."""
+    bs = 4
+    a = BlockAllocator(16, bs)
+    ids, _ = a.allocate_prompt(list(range(6)))      # 1 full + 1 partial
+    L, NB, KV, D = 2, 16, 1, 8
+    kq, vq, ks, vs = make_kv_pool_quant(L, NB, bs, KV, D)
+    del vq, vs
+    bt = jnp.asarray([ids + [0] * (4 - len(ids))], jnp.int32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 4), (1, 6, KV, D))
+    for layer in range(L):
+        kq, ks = write_prefill_kv_quant(kq, ks, layer, k, bt,
+                                        jnp.asarray([6]))
+    before = np.asarray(gather_kv_quant(kq, ks, 1, bt, 6))
+    fork = a.fork_sequence(ids)
+    grown, cow = a.grow(fork, 6, 1)
+    src, dst = cow
+    assert src == ids[-1] and dst == grown[-1]
+    kq, ks = copy_blocks_quant(kq, ks, jnp.asarray([src], jnp.int32),
+                               jnp.asarray([dst], jnp.int32))
+    bt_fork = jnp.asarray([grown + [0] * (4 - len(grown))], jnp.int32)
+    after = np.asarray(gather_kv_quant(kq, ks, 1, bt_fork, 6))
+    np.testing.assert_array_equal(before, after)
+    # scale rows really moved (the tail block's scale is non-trivial)
+    np.testing.assert_array_equal(np.asarray(ks[:, dst]),
+                                  np.asarray(ks[:, src]))
+    assert float(np.abs(np.asarray(ks[:, dst])).max()) > 0
+
+
+# ------------------------------------------------------------ kernel
+
+@pytest.mark.parametrize("use_alibi", [False, True])
+def test_paged_attention_quant_kernel_matches_ref(use_alibi):
+    """Interpret-mode Pallas kernel (in-register dequant) == dequantizing
+    XLA reference."""
+    from repro.core.alibi import alibi_slopes
+    from repro.kernels.paged_attention_quant import paged_attention_quant
+    from repro.kernels.ref import paged_attention_quant_ref
+    B, H, KV, D, NB, BS, MB = 3, 8, 2, 16, 16, 8, 4
+    q = jax.random.normal(jax.random.fold_in(KEY, 5), (B, H, D), jnp.float32)
+    kraw = jax.random.normal(jax.random.fold_in(KEY, 6), (NB, BS, KV, D))
+    vraw = jax.random.normal(jax.random.fold_in(KEY, 7), (NB, BS, KV, D))
+    full = jnp.ones((NB, BS), bool)
+    kq, ks = quantize_blocks(kraw, full)
+    vq, vs = quantize_blocks(vraw, full)
+    bt = jnp.asarray(np.random.default_rng(0).permutation(NB)[:B * MB]
+                     .reshape(B, MB), jnp.int32)
+    sl = jnp.asarray([17, 8, 30], jnp.int32)
+    slopes = alibi_slopes(H) if use_alibi else None
+    out = paged_attention_quant(q, kq, ks, vq, vs, bt, sl, slopes,
+                                interpret=True)
+    ref = paged_attention_quant_ref(q, kq, ks, vq, vs, bt, sl,
+                                    alibi_slopes=slopes)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# ------------------------------------------------------------ end to end
+
+def _generate(kv_cache_dtype, prompts, *, use_fused=True, temperature=0.0,
+              max_tokens=12, num_blocks=64):
+    llm = LLM.load("qwen1.5-0.5b", reduced=True,
+                   kv_cache_dtype=kv_cache_dtype, use_fused=use_fused,
+                   max_slots=3, num_blocks=num_blocks, max_blocks_per_seq=8,
+                   prefill_bucket=16, overrides={"num_layers": 2})
+    res = llm.generate(prompts, SamplingParams(temperature=temperature,
+                                               max_tokens=max_tokens))
+    return [o.token_ids for o in res], llm
+
+
+def _prompts(n, seed=0, lo=4, hi=20):
+    rng = np.random.default_rng(seed)
+    return [list(rng.integers(1, 200, int(rng.integers(lo, hi))))
+            for _ in range(n)]
+
+
+def test_int8_greedy_parity_with_bf16():
+    """Acceptance: greedy generations through the int8 KV cache match the
+    bf16 oracle token-for-token on the reduced config (the quantization
+    error is far below the reduced model's logit margins)."""
+    prompts = _prompts(5, seed=11)
+    o_bf16, llm_bf = _generate("bf16", prompts)
+    o_int8, llm_i8 = _generate("int8", prompts)
+    assert o_bf16 == o_int8
+    # and the memory win is real: >= 1.8x fewer KV pool bytes
+    ratio = (llm_bf.engine.runner.kv_pool_bytes()
+             / llm_i8.engine.runner.kv_pool_bytes())
+    assert ratio >= 1.8, ratio
+
+
+def test_int8_fused_matches_legacy_bitwise():
+    """Within int8 mode the fused megastep and the legacy loop remain
+    bitwise-identical (same quantize-on-write ops, same sampling streams),
+    including under temperature sampling."""
+    prompts = _prompts(4, seed=7)
+    for temp in (0.0, 0.9):
+        leg, _ = _generate("int8", prompts, use_fused=False,
+                           temperature=temp)
+        fus, _ = _generate("int8", prompts, use_fused=True, temperature=temp)
+        assert leg == fus, f"temperature={temp}"
+
+
+def test_int8_preemption_recompute_parity():
+    """Recompute-style preemption refills fresh blocks (overwritten
+    scales) — a block-starved int8 run matches a roomy one."""
+    prompts = _prompts(4, seed=11, lo=17, hi=30)
+    roomy, _ = _generate("int8", prompts, max_tokens=32, num_blocks=256)
+    tight, llm = _generate("int8", prompts, max_tokens=32, num_blocks=9)
+    assert llm.engine.metrics["preemptions"] > 0
+    assert roomy == tight
+
+
+def test_int8_rejects_sliding_window_archs():
+    with pytest.raises(ValueError, match="sliding"):
+        T.make_decode_state(get_reduced("h2o-danube-3-4b"), 2, 8, 2,
+                            kv_cache_dtype="int8")
+
+
+def test_int8_rejects_attention_free_archs():
+    """No silent no-op: an SSM model has no paged KV cache, so asking for
+    int8 KV must fail loudly instead of quietly quantizing nothing."""
+    with pytest.raises(ValueError, match="no attention KV cache"):
+        T.make_decode_state(get_reduced("falcon-mamba-7b"), 2, 8, 2,
+                            kv_cache_dtype="int8")
+
+
+def test_kv_cache_dtype_validation():
+    assert normalize_kv_cache_dtype(None) == "bf16"
+    assert normalize_kv_cache_dtype("bfloat16") == "bf16"
+    assert normalize_kv_cache_dtype("int8") == "int8"
+    with pytest.raises(ValueError, match="kv_cache_dtype"):
+        LLM.load("qwen1.5-0.5b", reduced=True, kv_cache_dtype="int4")
