@@ -157,7 +157,7 @@ def dequantize_blocks(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
 
 def write_prefill_kv_quant(values: jnp.ndarray, scales: jnp.ndarray,
                            layer, k: jnp.ndarray, block_table: jnp.ndarray,
-                           ctx_lens: jnp.ndarray, pos_offset: int = 0
+                           ctx_lens: jnp.ndarray, pos_offset=0
                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Quantize a prompt (or prompt chunk) into the int8 pool.
 
@@ -166,37 +166,47 @@ def write_prefill_kv_quant(values: jnp.ndarray, scales: jnp.ndarray,
     positions < ctx_lens are live.  Each touched block is quantized whole:
     blocks starting at/after ``pos_offset`` are fresh (scale overwritten);
     the one boundary block a chunked prefill appends into merges the
-    dequantized live prefix first.
+    dequantized live prefix first (``lead == 0`` degenerates to the
+    fresh write).
+
+    ``pos_offset`` may be a Python int or a *traced* scalar: the serving
+    chunk-prefill executable compiles once for a fixed ``[B, S]`` chunk
+    shape and feeds the chunk's start position as a device scalar, so
+    all block arithmetic (pad widths, table slices) uses dynamic-slice
+    forms — which constant-fold when the offset is static.
     """
     B, S, KV, D = k.shape
     NB, bs = values.shape[1], values.shape[2]
-    j0 = pos_offset // bs                      # first touched block (static)
-    nb = (pos_offset + S - 1) // bs - j0 + 1   # touched block count (static)
+    nb = -(-S // bs) + 1                       # static max touched blocks
+    j0 = pos_offset // bs                      # first touched block (traced)
     lead = pos_offset - j0 * bs                # live prefix rows in block j0
 
-    kpad = jnp.pad(k.astype(jnp.float32),
-                   ((0, 0), (lead, nb * bs - lead - S), (0, 0), (0, 0)))
-    buf = kpad.reshape(B, nb, bs, KV, D)
+    buf = jnp.zeros((B, nb * bs, KV, D), jnp.float32)
+    buf = jax.lax.dynamic_update_slice(buf, k.astype(jnp.float32),
+                                       (0, lead, 0, 0))
+    buf = buf.reshape(B, nb, bs, KV, D)
     pos = (j0 * bs + jnp.arange(nb * bs)).reshape(nb, bs)
     live = ((pos[None] >= pos_offset)
             & (pos[None] < ctx_lens[:, None, None]))           # [B, nb, bs]
 
     lp = values[layer]                                         # [NB,BS,KV,D]
     ls = scales[layer]                                         # [NB,KV]
-    blk = block_table[:, j0:j0 + nb]                           # [B, nb]
-    if lead:
-        # chunk boundary: block j0 already holds this sequence's tokens at
-        # slots [0, lead) — dequantize and merge them before requantizing.
-        old = dequantize_blocks(lp[blk[:, 0]], ls[blk[:, 0]])  # [B,bs,KV,D]
-        old_live = ((jnp.arange(bs)[None] < lead)
-                    & (pos[0][None] < ctx_lens[:, None]))      # [B, bs]
-        buf = buf.at[:, 0].add(
-            jnp.where(old_live[..., None, None], old, 0.0))
-        live = live.at[:, 0].set(live[:, 0] | old_live)
+    # pad the table with the OOB sentinel so the dynamic slice never
+    # clamps (a clamped start would misalign every block of the chunk);
+    # sentinel rows are dead (live is False past the capacity) anyway.
+    btp = jnp.concatenate(
+        [block_table, jnp.full((B, nb), NB, block_table.dtype)], axis=1)
+    blk = jax.lax.dynamic_slice_in_dim(btp, j0, nb, axis=1)    # [B, nb]
+    # chunk boundary: block j0 may already hold this sequence's tokens at
+    # slots [0, lead) — dequantize and merge them before requantizing.
+    safe0 = jnp.minimum(blk[:, 0], NB - 1)
+    old = dequantize_blocks(lp[safe0], ls[safe0])              # [B,bs,KV,D]
+    old_live = ((jnp.arange(bs)[None] < lead)
+                & (pos[0][None] < ctx_lens[:, None]))          # [B, bs]
+    buf = buf.at[:, 0].add(jnp.where(old_live[..., None, None], old, 0.0))
+    live = live.at[:, 0].set(live[:, 0] | old_live)
 
     q, sc = quantize_blocks(buf, live)
-    # a block is written iff it holds any live row; dead blocks (past a
-    # short sequence's context) route out of bounds and are dropped.
     tgt = jnp.where(live.any(-1), blk, NB)                     # [B, nb]
     lp = lp.at[tgt].set(q, mode="drop")
     ls = ls.at[tgt].set(sc, mode="drop")

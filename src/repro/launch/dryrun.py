@@ -56,8 +56,12 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
                scan_layers: bool, num_layers: Optional[int] = None,
                quant: bool = False, skip_mixer_core: bool = False,
                num_microbatches: int = 1, rt_extra: Optional[dict] = None,
-               policy: str = "2d"):
-    """Returns (jitted_fn, arg_specs tuple) for one cell."""
+               policy: str = "2d", chunk_tokens: Optional[int] = None):
+    """Returns (jitted_fn, arg_specs tuple) for one cell.
+
+    ``chunk_tokens`` (serving ``max_num_batched_tokens``) switches a
+    prefill cell to the fixed-shape chunk executable — the [1, W] +
+    scalar-offset form the token-budget engine compiles exactly once."""
     if num_layers is not None:
         cfg = cfg.replace(num_layers=num_layers)
     ctx = make_ctx(mesh, policy)
@@ -93,6 +97,17 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
         return fn, (params, opt, batch)
 
     if shape.kind == "prefill":
+        if chunk_tokens and T.supports_chunked_prefill(cfg):
+            from repro.core.kv_quant import cache_from_state
+            state = MR.decode_state_specs(cfg, shape)
+            s_sh = state_shardings(ctx, state, cfg)
+            cache = cache_from_state(state)
+            c_sh = cache_from_state(s_sh)     # pool shardings ride along
+            batch = MR.chunk_prefill_input_specs(cfg, shape, chunk_tokens)
+            step = MR.make_chunk_prefill_step(cfg, ctx, rt)
+            fn = jax.jit(step, in_shardings=(p_sh, c_sh, None),
+                         out_shardings=(None, c_sh), donate_argnums=(1,))
+            return fn, (params, cache, batch)
         batch = MR.input_specs(cfg, shape)
         b_sh = batch_shardings(ctx, batch)
         if cfg.is_encoder:
@@ -134,7 +149,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              quant: bool = False, skip_cost: bool = False,
              rt_extra: Optional[dict] = None,
              num_microbatches: Optional[int] = None,
-             policy: str = "2d", cache_dtype: Optional[str] = None
+             policy: str = "2d", cache_dtype: Optional[str] = None,
+             chunk_tokens: Optional[int] = None
              ) -> Dict[str, Any]:
     cfg = get_config(arch)
     if cache_dtype:
@@ -163,7 +179,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         fn, specs = build_cell(cfg, shape, mesh,
                                scan_layers=(shape.kind != "decode"),
                                quant=quant, num_microbatches=nm,
-                               rt_extra=rt_extra, policy=policy)
+                               rt_extra=rt_extra, policy=policy,
+                               chunk_tokens=chunk_tokens)
         compiled = fn.lower(*specs).compile()
         try:
             ma = compiled.memory_analysis()
@@ -206,7 +223,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 f2, sp2 = build_cell(cfg, shape, mesh, scan_layers=False,
                                      num_layers=L, quant=quant,
                                      skip_mixer_core=skip, rt_extra=rt_extra,
-                                     policy=policy)
+                                     policy=policy, chunk_tokens=chunk_tokens)
                 tt[tag] = RF.terms_from_compiled(f2.lower(*sp2).compile())
             terms[skip] = RF.extrapolate(tt["a"], tt["b"], l_a, l_b,
                                          cfg.num_layers)
@@ -241,6 +258,10 @@ def main() -> None:
                     help="e.g. float8_e4m3fn for the fp8 KV-cache variant")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill (vLLM-style) token budget")
+    ap.add_argument("--max-num-batched-tokens", type=int, default=0,
+                    help="lower prefill cells as the serving engine's "
+                         "fixed-shape [1, W] chunk executable (W = this "
+                         "budget) instead of the whole-prompt form")
     ap.add_argument("--suffix", default="")
     ap.add_argument("--skip-cost", action="store_true")
     ap.add_argument("--out", default=OUT_DIR)
@@ -268,6 +289,7 @@ def main() -> None:
                 + ("__q4" if args.quant else "") \
                 + (f"__{args.policy}" if args.policy != "2d" else "") \
                 + (f"__kv8" if args.cache_dtype else "") \
+                + ("__chunk" if args.max_num_batched_tokens else "") \
                 + args.suffix
             out_path = os.path.join(args.out, tag + ".json")
             if status != "run":
@@ -282,7 +304,9 @@ def main() -> None:
                 res = run_cell(arch, shape_name, mp, quant=args.quant,
                                skip_cost=args.skip_cost, policy=args.policy,
                                cache_dtype=args.cache_dtype,
-                               rt_extra=rt_extra)
+                               rt_extra=rt_extra,
+                               chunk_tokens=args.max_num_batched_tokens
+                               or None)
                 res["status"] = "ok"
                 json.dump(res, open(out_path, "w"), indent=1)
                 rf = res.get("roofline", {})

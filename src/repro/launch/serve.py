@@ -43,6 +43,16 @@ def main() -> None:
                          "bytes/token vs bf16)")
     ap.add_argument("--checkpoint", default=None,
                     help="Checkpointer directory to restore params from")
+    ap.add_argument("--max-num-batched-tokens", type=int, default=256,
+                    help="per-step token budget: running decodes are "
+                         "packed first, prefill chunks fill the rest "
+                         "(bounds inter-token latency at O(chunk))")
+    ap.add_argument("--enable-chunked-prefill",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="--no-enable-chunked-prefill restores the "
+                         "stop-the-world whole-prompt prefill (the "
+                         "parity oracle; also the path non-full-"
+                         "attention archs always use)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -67,6 +77,8 @@ def main() -> None:
                    reduced=args.reduced, overrides=overrides,
                    seed=args.seed, max_slots=args.slots,
                    num_blocks=args.blocks, max_blocks_per_seq=16,
+                   max_num_batched_tokens=args.max_num_batched_tokens,
+                   enable_chunked_prefill=args.enable_chunked_prefill,
                    prefill_bucket=32)
 
     rng = np.random.default_rng(args.seed)

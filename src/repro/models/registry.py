@@ -49,6 +49,29 @@ def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig,
                                     kv_cache_dtype=kv_cache_dtype))
 
 
+def chunk_prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                              chunk_tokens: int) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the serving chunk-prefill executable: one
+    sequence, a fixed ``[1, chunk_tokens]`` token window and scalar
+    offsets — the shape that compiles once regardless of prompt length
+    (``max_num_batched_tokens`` on the serving engine)."""
+    g = decode_geometry(cfg, shape)
+    return {"tokens": sds((1, min(chunk_tokens,
+                                  g["max_blocks_per_seq"]
+                                  * g["block_size"])), I32),
+            "block_table": sds((1, g["max_blocks_per_seq"]), I32),
+            "pos_offset": sds((), I32),
+            "total_len": sds((), I32)}
+
+
+def make_chunk_prefill_step(cfg: ModelConfig, ctx=None, rt=None):
+    def step(params, cache, batch):
+        return T.prefill_chunk(cfg, params, cache, batch["tokens"],
+                               batch["block_table"], batch["pos_offset"],
+                               batch["total_len"], ctx, rt)
+    return step
+
+
 def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
     """ShapeDtypeStruct stand-ins for the step function's data arguments."""
     B, S = shape.global_batch, shape.seq_len

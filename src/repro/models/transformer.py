@@ -640,6 +640,111 @@ def _prefill_chunked(cfg: ModelConfig, params: Params, state, x, ctx_lens,
     return logits.astype(jnp.float32), state
 
 
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Serving-side chunked prefill needs every layer to carry its state
+    in the paged KV pool (homogeneous full-attention stacks): SSM /
+    recurrent / sliding-ring layers hold per-slot recurrent state that is
+    not yet re-enterable mid-prompt, so those archs keep the whole-prompt
+    path.  Encoders are excluded too: bidirectional attention has no
+    causal chunk decomposition (and no KV cache to chunk into)."""
+    return _is_homogeneous(cfg) and cfg.layer_kind(0) == "full" \
+        and not cfg.is_encoder
+
+
+def prefill_chunk(cfg: ModelConfig, params: Params, cache,
+                  tokens: jnp.ndarray, block_table: jnp.ndarray,
+                  pos_offset: jnp.ndarray, total_len: jnp.ndarray,
+                  ctx: Optional[ParallelCtx] = None,
+                  rt: Optional[dict] = None):
+    """One fixed-shape prefill chunk of ONE sequence (token-budget serving).
+
+    Unlike ``prefill`` (whole padded prompt, one compile per ``[B, S]``)
+    and ``_prefill_chunked`` (static per-offset chunks inside one call),
+    this is the serving executable: ``tokens`` is always ``[1, W]``
+    (W = the engine's chunk budget) and ``pos_offset`` / ``total_len``
+    are *device scalars*, so every chunk of every prompt — first, middle,
+    last, any length — runs from a single compiled executable.
+
+    tokens: [1, W] right-padded chunk (positions pos_offset + i);
+    block_table: [1, MB] this sequence's block row (chunk blocks already
+    allocated); pos_offset: i32 scalar, absolute position of tokens[0, 0];
+    total_len: i32 scalar, pos_offset + live chunk length.  Each layer
+    writes the chunk's K/V into the paged pool at its absolute positions
+    (int8 mode merges the boundary block via the dynamic-offset quant
+    write), then attends over the pool gathered up to the (static) table
+    capacity with the causal mask doing the live-length masking.  Padded
+    rows compute garbage that never escapes their row; the returned
+    logits ``[1, V]`` are the *last live token's* — only meaningful on a
+    prompt's final chunk.  Returns (logits, cache).
+    """
+    from repro.core.kv_quant import kv_gather, kv_write_prefill
+    from repro.kernels import ops as kops
+    from repro.models.attention import _qkv, _slopes
+    rt = rt or {}
+    assert supports_chunked_prefill(cfg), cfg.name
+    W = tokens.shape[1]
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))   # [1, W, d]
+    positions = pos_offset + jnp.arange(W)
+    ctx_lens = total_len[None] if total_len.ndim == 0 else total_len
+    cap = block_table.shape[1] * cache.block_size              # static
+    slopes = _slopes(cfg)
+
+    def body(carry, inp):
+        h, cache = carry
+        lp, li = inp
+        hn = apply_norm(lp["attn_norm"], h, cfg.norm, cfg.norm_eps)
+        q, k, v = _qkv(cfg, lp["attn"], hn, positions, ctx, rt)
+        cache = kv_write_prefill(cache, li, k, v, block_table, ctx_lens,
+                                 pos_offset=pos_offset)
+        kc, vc = kv_gather(cache, li, block_table, cap, q.dtype)
+        # the chunk attends its OWN tokens raw (exactly like whole-prompt
+        # prefill), not pool-roundtripped: overlay the fresh K/V onto the
+        # gathered view so int8 quantization noise only enters for
+        # *earlier* chunks' positions. The W-row scratch tail keeps the
+        # dynamic write from clamping when a chunk ends at capacity.
+        scratch = jnp.zeros((1, W) + kc.shape[2:], kc.dtype)
+        kc = jax.lax.dynamic_update_slice(
+            jnp.concatenate([kc, scratch], 1), k.astype(kc.dtype),
+            (0, pos_offset, 0, 0))[:, :cap]
+        vc = jax.lax.dynamic_update_slice(
+            jnp.concatenate([vc, scratch], 1), v.astype(vc.dtype),
+            (0, pos_offset, 0, 0))[:, :cap]
+        if rt.get("skip_mixer_core"):
+            o = q * (1 + 1e-30 * (kc.sum() + vc.sum()))
+        else:
+            # XLA flash reference: the traced q_offset drives the causal
+            # mask, which also hides every not-yet-written pool position
+            # (a live query at absolute p only sees keys <= p, all
+            # written). A dynamic-offset Pallas flash kernel is the open
+            # TPU follow-up (ROADMAP).
+            o = kops.flash_attention(
+                q, kc, vc, slopes, causal=True, q_offset=pos_offset,
+                use_pallas=False)
+        h = h + linear(o.reshape(*o.shape[:2], -1), lp["attn"]["wo"], rt)
+        hn = apply_norm(lp["mlp_norm"], h, cfg.norm, cfg.norm_eps)
+        if cfg.num_experts:
+            y = moe_apply(cfg, lp["moe"], hn, ctx, rt)
+        else:
+            y = mlp_apply(lp["mlp"], hn, cfg.act, rt)
+        return (h + y, cache), None
+
+    if rt.get("scan_layers", True):
+        (x, cache), _ = jax.lax.scan(
+            body, (x, cache), (params["layers"], jnp.arange(cfg.num_layers)))
+    else:                        # unrolled (dry-run cost extrapolation)
+        carry = (x, cache)
+        for li in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[li], params["layers"])
+            carry, _ = body(carry, (lp, jnp.int32(li)))
+        x, cache = carry
+
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    last_i = jnp.clip(total_len - pos_offset - 1, 0, W - 1)
+    last = jnp.take_along_axis(x, last_i[None, None, None], axis=1)[:, 0]
+    logits = unembed(last, params["embed"], params.get("head"))
+    return logits.astype(jnp.float32), cache
+
+
 def attn_prefill_ring(cfg, p, x, ctx, *, kind, cache, layer,
                       block_table, ctx_lens, rt):
     """Sliding-window prefill: compute flash-SWA attention, then write each

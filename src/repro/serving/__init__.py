@@ -11,7 +11,9 @@ Deprecated (one-release shim)::
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.llm import LLM
 from repro.serving.params import RequestOutput, SamplingParams
-from repro.serving.scheduler import RequestState, Scheduler, Sequence
+from repro.serving.scheduler import (PrefillChunk, RequestState, Scheduler,
+                                     Sequence, StepPlan)
 
 __all__ = ["LLM", "SamplingParams", "RequestOutput", "ServingEngine",
-           "Request", "RequestState", "Scheduler", "Sequence"]
+           "Request", "RequestState", "Scheduler", "Sequence",
+           "StepPlan", "PrefillChunk"]

@@ -4,10 +4,24 @@ The engine is a thin conductor over two halves:
 
 * ``serving.scheduler.Scheduler`` — pure host policy: admission
   (watermark + prompt clamping), slot/block accounting, recompute-style
-  preemption, capacity force-finishing, fused-horizon planning;
+  preemption, capacity force-finishing, and the per-iteration token
+  budget plan (``plan_step``): running decodes packed first
+  (decode-priority, so inter-token latency stays bounded at O(chunk)
+  instead of O(longest prompt)), then prefill *chunks* of
+  partially-admitted prompts into the remaining
+  ``max_num_batched_tokens``, with KV blocks allocated incrementally
+  per chunk;
 * ``serving.model_runner.ModelRunner`` — the device: paged KV pools,
-  jitted prefill / per-token decode / fused megastep, CoW block copies,
+  the fixed-shape ``[1, chunk_tokens]`` chunk-prefill executable
+  (compiled ONCE regardless of prompt length or wave composition),
+  jitted per-token decode / fused megastep, CoW block copies,
   on-device per-slot sampling.
+
+``enable_chunked_prefill=False`` (or an arch whose prefill state cannot
+yet re-enter mid-prompt: SSM / recurrent / sliding-ring stacks)
+restores the stop-the-world whole-prompt wave — retained as the parity
+oracle: chunked greedy serving is token-exact against it on the
+reduced configs for both the bf16 and int8 KV pools.
 
 Requests enter with a ``SamplingParams`` (temperature / top_k / top_p /
 seed / stop token ids / max_tokens) that is lowered to padded per-slot
@@ -32,18 +46,22 @@ from __future__ import annotations
 
 import time
 import warnings
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Sequence as SeqT
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.paged_cache import BlockAllocator
+from repro.models import transformer as T
 from repro.serving.model_runner import ModelRunner
 from repro.serving.params import (FINISH_LENGTH, FINISH_STOP, RequestOutput,
                                   SamplingParams)
-from repro.serving.scheduler import RequestState, Scheduler, Sequence
+from repro.serving.scheduler import (PrefillChunk, RequestState, Scheduler,
+                                     Sequence, StepPlan)
 
 
 @dataclass
@@ -69,7 +87,9 @@ class ServingEngine:
                  prefill_bucket: int = 64, rt: Optional[dict] = None,
                  seed: int = 0, use_fused: bool = True,
                  max_horizon: int = 8, detokenizer=None,
-                 kv_cache_dtype: str = "bf16"):
+                 kv_cache_dtype: str = "bf16",
+                 max_num_batched_tokens: int = 256,
+                 enable_chunked_prefill: bool = True):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -84,10 +104,15 @@ class ServingEngine:
             "host_syncs": 0, "decode_dispatches": 0, "decode_steps": 0,
             "decode_time_s": 0.0, "truncated_prompts": 0,
             # dispatches after the first: excludes jit compile of the step
-            "decode_warm_steps": 0, "decode_warm_time_s": 0.0}
+            "decode_warm_steps": 0, "decode_warm_time_s": 0.0,
+            "prefill_chunks": 0, "plan_steps": 0, "budget_tokens_used": 0}
         # sliding-window-only archs use a fixed ring cache: no block growth
         ring_only = bool(cfg.sliding_window) and not any(
             cfg.layer_kind(i) == "full" for i in range(cfg.num_layers))
+        # chunked prefill needs every layer's prefill state to live in the
+        # paged pool; SSM / recurrent / ring archs keep the oracle path
+        self.chunked = bool(enable_chunked_prefill) \
+            and T.supports_chunked_prefill(cfg)
         alloc = BlockAllocator(
             num_blocks, cfg.paging.block_size,
             enable_prefix_reuse=cfg.paging.enable_prefix_reuse,
@@ -95,14 +120,29 @@ class ServingEngine:
         self.scheduler = Scheduler(alloc, max_slots=max_slots,
                                    max_blocks_per_seq=max_blocks_per_seq,
                                    ring_only=ring_only, metrics=self.metrics)
+        self.max_num_batched_tokens = int(max_num_batched_tokens)
+        if self.chunked and self.max_num_batched_tokens <= max_slots:
+            raise ValueError(
+                f"max_num_batched_tokens={max_num_batched_tokens} must "
+                f"exceed max_slots={max_slots}: a step of all-decode slots "
+                "would otherwise leave prefill no budget (starvation)")
+        # the chunk executable's fixed token width: a chunk can never be
+        # longer than the budget, nor than a sequence's KV capacity
+        chunk_tokens = min(self.max_num_batched_tokens,
+                           self.scheduler.cap_tokens) if self.chunked \
+            else None
         self.runner = ModelRunner(cfg, params, max_slots=max_slots,
                                   num_blocks=num_blocks,
                                   max_blocks_per_seq=max_blocks_per_seq,
                                   rt=rt, max_horizon=self.max_horizon,
-                                  kv_cache_dtype=kv_cache_dtype)
+                                  kv_cache_dtype=kv_cache_dtype,
+                                  chunk_tokens=chunk_tokens)
         self.kv_cache_dtype = self.runner.kv_cache_dtype
         self._t0: Optional[float] = None
         self._next_rid = 0
+        # bounded window: a long-lived streaming engine must not grow a
+        # sample per token forever; 64k recent gaps is plenty for p99
+        self._itl_samples: deque = deque(maxlen=65536)
 
     # ---------------------------------------------------- facade views
     @property
@@ -197,6 +237,12 @@ class ServingEngine:
         and the max_tokens budget; finishing frees KV blocks immediately
         (tokens past a stop are discarded). Emits the delta event."""
         req = s.req
+        if toks:
+            # inter-token latency sample: gap between this token-bearing
+            # event and the request's previous one (TTFT excluded)
+            if req.last_event_t is not None:
+                self._itl_samples.append(now - req.last_event_t)
+            req.last_event_t = now
         for tok in toks:
             req.output.append(int(tok))
             s.last_token = int(tok)
@@ -213,10 +259,6 @@ class ServingEngine:
         self._emit(req, outs)
 
     # ------------------------------------------------------------ prefill
-    def _bucket(self, n: int) -> int:
-        b = self.prefill_bucket
-        return min(((n + b - 1) // b) * b, self.scheduler.cap_tokens)
-
     def _sampling_rows(self, recs: List[RequestState]) -> Dict[str, np.ndarray]:
         """Stack per-request SamplingParams into padded device-ready rows."""
         B = len(recs)
@@ -241,9 +283,17 @@ class ServingEngine:
             recs[slot] = s.req
         return self._sampling_rows(recs)
 
-    def _run_prefill(self, seqs: List[Sequence],
-                     outs: List[RequestOutput]) -> None:
-        maxlen = self._bucket(max(s.seq_len for s in seqs))
+    def _run_prefill_oracle(self, seqs: List[Sequence],
+                            outs: List[RequestOutput]) -> None:
+        """Stop-the-world wave prefill — retained ONLY as the parity
+        oracle behind ``enable_chunked_prefill=False`` (and for archs the
+        chunk executable cannot serve): pads the whole wave to a
+        ``prefill_bucket`` multiple, so it recompiles per (wave size,
+        bucket) pair and stalls every running sequence for the duration
+        of the longest prompt."""
+        b = self.prefill_bucket
+        maxlen = max(s.seq_len for s in seqs)
+        maxlen = min(((maxlen + b - 1) // b) * b, self.scheduler.cap_tokens)
         logits = self.runner.prefill(seqs, maxlen)
         self.metrics["prompt_tokens"] += sum(s.seq_len for s in seqs)
         # first sampled token, per-request sampling streams
@@ -258,6 +308,37 @@ class ServingEngine:
         # decode's sync.
         self.runner.sync_tables(self.scheduler.running)
 
+    def _run_prefill_chunks(self, chunks: List[PrefillChunk],
+                            outs: List[RequestOutput]) -> None:
+        """Execute the plan's prefill chunks through the fixed-shape
+        executable.  Logits stay on device; prompts completing this step
+        have their first token sampled in ONE batched call (a single
+        host sync for any number of finishing prompts)."""
+        final: List[tuple] = []
+        for c in chunks:
+            logits = self.runner.prefill_chunk(c.seq, c.start, c.length)
+            self.scheduler.complete_chunk(c)
+            self.metrics["prefill_chunks"] += 1
+            self.metrics["prompt_tokens"] += c.length
+            if c.last:
+                final.append((c.seq, logits))
+        if not final:
+            return
+        # pad to max_slots rows so this sample executable compiles once
+        # regardless of how many prompts finish in a step (and shares its
+        # shape with the legacy decode path's per-slot sample)
+        pad = self.max_slots - len(final)
+        stacked = jnp.concatenate(
+            [lg for _, lg in final]
+            + ([jnp.zeros((pad,) + final[0][1].shape[1:],
+                          final[0][1].dtype)] if pad else []), axis=0)
+        nxt = self.runner.sample(stacked, self._sampling_rows(
+            [s.req for s, _ in final] + [None] * pad))
+        self.metrics["host_syncs"] += 1
+        now = time.perf_counter()
+        for i, (s, _) in enumerate(final):
+            self._absorb(s, [int(nxt[i])], now, outs)
+
     # ------------------------------------------------------------ decode
     def _record_decode_time(self, dt: float, steps: int) -> None:
         self.metrics["decode_time_s"] += dt
@@ -265,79 +346,90 @@ class ServingEngine:
             self.metrics["decode_warm_time_s"] += dt
             self.metrics["decode_warm_steps"] += steps
 
-    def _prepare_dispatch(self, horizon: int) -> int:
-        """Plan + pre-allocate one dispatch; returns the granted horizon
-        (0 if nothing is runnable after preemption)."""
+    def _prepare_dispatch(self, horizon: int) -> StepPlan:
+        """Oracle-mode planning: horizon + block growth for all running
+        (= all decodable) sequences, as one degenerate StepPlan."""
         h = self.scheduler.plan_horizon(horizon)
-        if not self.scheduler.running or h == 0:
-            return 0
-        cow_pairs = self.scheduler.grow_for_horizon(h)
-        if cow_pairs:
-            self.runner.copy_cow(cow_pairs)
-        self.runner.sync_tables(self.scheduler.running)
-        return h
+        cow = self.scheduler.grow_for_horizon(h) if h else []
+        return StepPlan(decode_slots=sorted(self.scheduler.decodable())
+                        if h else [], horizon=h, cow_pairs=cow,
+                        prefill=[], budget=0)
 
-    def _decode_legacy(self, outs: List[RequestOutput]) -> None:
-        """Oracle path: one token per dispatch, host-side readback each
-        step — same planner, same sampling kernel as the fused path."""
-        t0 = time.perf_counter()
-        if self._prepare_dispatch(1) == 0:
+    def _dispatch_decode(self, plan: StepPlan,
+                         outs: List[RequestOutput]) -> None:
+        """Execute a plan's decode half: fused megastep over the planned
+        horizon, or the legacy per-token loop (same planner, same
+        sampling kernel — the bitwise-equivalence oracle).  Only the
+        plan's decodable slots are active: mid-prefill slots get device
+        seq_len 0, so the decode KV scatter drops their writes."""
+        if not plan.decode_slots:
             return
+        t0 = time.perf_counter()
+        if plan.cow_pairs:
+            self.runner.copy_cow(plan.cow_pairs)
+        # device tables carry EXACTLY the planned slots: everything else
+        # (mid-prefill, or decodables a degenerate budget left out) gets
+        # seq_len 0, so the decode KV scatter drops their writes
+        self.runner.sync_tables({slot: self.scheduler.running[slot]
+                                 for slot in plan.decode_slots})
         toks = np.zeros((self.max_slots,), np.int32)
-        for slot, s in self.scheduler.running.items():
-            toks[slot] = s.last_token
-        logits = self.runner.decode(toks)
-        nxt = self.runner.sample(logits, self._slot_sampling())
+        for slot in plan.decode_slots:
+            toks[slot] = self.scheduler.running[slot].last_token
+        if self.use_fused:
+            active = np.zeros((self.max_slots,), bool)
+            active[plan.decode_slots] = True
+            out_np = self.runner.megastep(toks, self._slot_sampling(),
+                                          active, plan.horizon)
+            nxt_rows = {slot: out_np[:, slot].tolist()
+                        for slot in plan.decode_slots}
+        else:
+            logits = self.runner.decode(toks)
+            nxt = self.runner.sample(logits, self._slot_sampling())
+            nxt_rows = {slot: [int(nxt[slot])] for slot in plan.decode_slots}
         self.metrics["host_syncs"] += 1
         self.metrics["decode_dispatches"] += 1
-        self.metrics["decode_steps"] += 1
+        self.metrics["decode_steps"] += plan.horizon
         now = time.perf_counter()
-        for slot in sorted(self.scheduler.running):
-            self._absorb(self.scheduler.running[slot], [int(nxt[slot])],
+        for slot in plan.decode_slots:
+            self._absorb(self.scheduler.running[slot], nxt_rows[slot],
                          now, outs)
-        self._record_decode_time(time.perf_counter() - t0, 1)
-
-    def _decode_fused(self, outs: List[RequestOutput]) -> None:
-        t0 = time.perf_counter()
-        h = self._prepare_dispatch(self.max_horizon)
-        if h == 0:
-            return
-        toks = np.zeros((self.max_slots,), np.int32)
-        active = np.zeros((self.max_slots,), bool)
-        for slot, s in self.scheduler.running.items():
-            toks[slot] = s.last_token
-            active[slot] = True
-        out_np = self.runner.megastep(toks, self._slot_sampling(), active, h)
-        self.metrics["host_syncs"] += 1
-        self.metrics["decode_dispatches"] += 1
-        self.metrics["decode_steps"] += h
-        now = time.perf_counter()
-        for slot in sorted(self.scheduler.running):
-            self._absorb(self.scheduler.running[slot],
-                         out_np[:, slot].tolist(), now, outs)
-        self._record_decode_time(time.perf_counter() - t0, h)
+        self._record_decode_time(time.perf_counter() - t0, plan.horizon)
 
     # ------------------------------------------------------------ drive
     def step(self) -> List[RequestOutput]:
-        """One engine iteration: admit, then decode for all running — a
-        single token (legacy) or a fused multi-token horizon. Returns the
+        """One engine iteration under the token budget: the scheduler
+        plans decodes first (fused horizon when no prefill is pending,
+        one interleaved token otherwise), then packs prefill chunks into
+        the remaining budget; the runner executes both halves.  With
+        ``enable_chunked_prefill=False`` the pre-budget stop-the-world
+        behaviour is preserved as the parity oracle.  Returns the
         ``RequestOutput`` deltas produced by this iteration."""
         if self._t0 is None:
             self._t0 = time.perf_counter()
         outs: List[RequestOutput] = []
         for req in self.scheduler.finish_at_capacity():
             self._emit(req, outs)    # free slots/blocks before admission
-        admitted = self.scheduler.try_admit()
-        if admitted:
-            self._run_prefill(admitted, outs)
-        for req in self.scheduler.finish_at_capacity():
-            self._emit(req, outs)    # a fresh exactly-cap prefill may
-        if not self.scheduler.running:  # already be at the table boundary
+        if not self.chunked:
+            admitted = self.scheduler.try_admit()
+            if admitted:
+                self._run_prefill_oracle(admitted, outs)
+            for req in self.scheduler.finish_at_capacity():
+                self._emit(req, outs)    # a fresh exactly-cap prefill may
+            if not self.scheduler.running:  # already be at the boundary
+                return outs
+            plan = self._prepare_dispatch(
+                self.max_horizon if self.use_fused else 1)
+            self._dispatch_decode(plan, outs)
             return outs
-        if self.use_fused:
-            self._decode_fused(outs)
-        else:
-            self._decode_legacy(outs)
+        plan = self.scheduler.plan_step(
+            self.max_num_batched_tokens,
+            max_horizon=self.max_horizon if self.use_fused else 1)
+        self._dispatch_decode(plan, outs)
+        if plan.prefill:
+            self._run_prefill_chunks(plan.prefill, outs)
+        if plan.used:
+            self.metrics["plan_steps"] += 1
+            self.metrics["budget_tokens_used"] += plan.used
         return outs
 
     def stream(self, max_steps: int = 100000) -> Iterator[RequestOutput]:
@@ -355,6 +447,14 @@ class ServingEngine:
             self.step()
             steps += 1
         return self.report()
+
+    def reset_itl_window(self) -> None:
+        """Drop accumulated inter-token-latency samples so ``report()``'s
+        ITL percentiles cover only what follows — e.g. a steady-state
+        window after warm-up/compile steps.  Live requests keep their
+        last-event timestamps: a stall in progress still lands in the
+        first post-reset sample."""
+        self._itl_samples.clear()
 
     def report(self) -> Dict[str, float]:
         """The paper's three numbers (+ fast-path and streaming counters)."""
@@ -375,9 +475,24 @@ class ServingEngine:
                         / self.metrics["decode_warm_steps"])
         else:
             step_lat = self.metrics["decode_time_s"] / d_steps
+        # inter-token latency percentiles over per-event gaps: under
+        # stop-the-world prefill the p99 carries the "one long prompt
+        # stalls everyone" spikes the chunked planner bounds at O(chunk)
+        itl = np.asarray(self._itl_samples, np.float64)
+        itl_p50 = float(np.percentile(itl, 50)) if itl.size else float("nan")
+        itl_p99 = float(np.percentile(itl, 99)) if itl.size else float("nan")
+        plan_steps = self.metrics["plan_steps"]
+        budget_util = (self.metrics["budget_tokens_used"]
+                       / (plan_steps * self.max_num_batched_tokens)) \
+            if plan_steps else float("nan")
         return {
             "latency_s": lat,
             "ttft_s": ttft,
+            "itl_p50_ms": itl_p50 * 1e3,
+            "itl_p99_ms": itl_p99 * 1e3,
+            "prefill_chunks": self.metrics["prefill_chunks"],
+            "prefill_compiles": self.runner.prefill_compiles(),
+            "budget_utilization": budget_util,
             "throughput_req_s": n / wall,
             "throughput_tok_s": total_toks / wall,
             "generate_tok_s": self.metrics["gen_tokens"] / wall,

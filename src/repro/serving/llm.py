@@ -80,8 +80,15 @@ class LLM:
         seed:       param init (when no checkpoint) and the engine's
                     default per-request sampling streams.
         engine_kw:  forwarded to ``ServingEngine`` (max_slots,
-                    num_blocks, max_blocks_per_seq, prefill_bucket, rt,
-                    use_fused, max_horizon, detokenizer via __init__).
+                    num_blocks, max_blocks_per_seq,
+                    max_num_batched_tokens, enable_chunked_prefill,
+                    prefill_bucket [oracle path only], rt, use_fused,
+                    max_horizon, detokenizer via __init__).
+                    ``max_num_batched_tokens`` caps the tokens one
+                    engine step may batch (decodes first, then prefill
+                    chunks); ``enable_chunked_prefill=False`` restores
+                    the stop-the-world whole-prompt prefill (the parity
+                    oracle).
         """
         if quant not in QUANT_MODES:
             raise ValueError(f"unknown quant mode {quant!r}; "

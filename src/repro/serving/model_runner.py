@@ -19,7 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.kv_quant import normalize_kv_cache_dtype
+from repro.core.kv_quant import (cache_from_state, cache_to_state,
+                                 normalize_kv_cache_dtype)
 from repro.core.paged_cache import copy_blocks
 from repro.core.sampling import sample_from_logits
 from repro.models import transformer as T
@@ -33,7 +34,8 @@ class ModelRunner:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
                  num_blocks: int, max_blocks_per_seq: int,
                  rt: Optional[dict] = None, max_horizon: int = 8,
-                 state_dtype=jnp.float32, kv_cache_dtype: str = "bf16"):
+                 state_dtype=jnp.float32, kv_cache_dtype: str = "bf16",
+                 chunk_tokens: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -42,12 +44,23 @@ class ModelRunner:
         self.rt = dict(rt or {})
         self.max_horizon = max(1, max_horizon)
         self.kv_cache_dtype = normalize_kv_cache_dtype(kv_cache_dtype)
+        self.chunk_tokens = chunk_tokens
         self.state = T.make_decode_state(cfg, max_slots, num_blocks, self.mb,
                                          dtype=state_dtype,
                                          kv_cache_dtype=self.kv_cache_dtype)
 
         self._prefill = jax.jit(
             lambda p, s, b: T.prefill(cfg, p, s, b, None, self.rt))
+        # the serving chunk executable: [1, chunk_tokens] + scalar offsets
+        # regardless of prompt length or batch composition, so it compiles
+        # exactly once. Pools are donated: the chunk scatter updates the
+        # [L, NB, BS, KV, D] arrays (+ int8 scales) in place.
+        self._prefill_chunk = None
+        if chunk_tokens:
+            self._prefill_chunk = jax.jit(
+                lambda p, c, t, bt, off, tl: T.prefill_chunk(
+                    cfg, p, c, t, bt, off, tl, None, self.rt),
+                donate_argnums=(1,))
         self._decode = jax.jit(
             lambda p, s, t: T.decode_step(cfg, p, s, t, None, self.rt))
         # the fused megastep donates the whole decode state: the KV pools
@@ -109,6 +122,39 @@ class ModelRunner:
             self.state[k] = self.state[k].at[:, [s.slot for s in seqs]].set(
                 sub[k])
         return logits
+
+    def prefill_chunk(self, seq, start: int, length: int) -> jnp.ndarray:
+        """Run one prefill chunk of one sequence through the fixed-shape
+        executable: tokens [1, W] right-padded, scalar position offset.
+        Scatters the chunk K/V into the live pools (donated, in place)
+        and returns the last-live-token logits [1, V] as a *device*
+        array — the engine batches first-token sampling across the
+        step's final chunks, so no host sync happens here."""
+        W = self.chunk_tokens
+        toks = np.zeros((1, W), np.int32)
+        toks[0, :length] = seq.req.prompt[start:start + length]
+        bt = np.zeros((1, self.mb), np.int32)
+        bt[0, :len(seq.block_ids)] = seq.block_ids
+        cache = cache_from_state(self.state)
+        logits, cache = self._prefill_chunk(
+            self.params, cache, jnp.asarray(toks), jnp.asarray(bt),
+            jnp.int32(start), jnp.int32(start + length))
+        self.state.update(cache_to_state(cache))
+        return logits
+
+    def prefill_compiles(self) -> float:
+        """Compile count of the active prefill executable: 1 forever for
+        the fixed-shape chunk path; one per distinct (wave size, bucket)
+        shape for the whole-prompt oracle (the recompile explosion the
+        chunked path removes).  Counted via the jit wrapper's
+        ``_cache_size`` (private jax API): if a jax bump removes it,
+        NaN is returned so gates skip with an API-drift notice instead
+        of reading as a fake recompile regression."""
+        fn = self._prefill_chunk if self._prefill_chunk is not None \
+            else self._prefill
+        if not hasattr(fn, "_cache_size"):     # pragma: no cover - jax API
+            return float("nan")
+        return float(fn._cache_size())
 
     # ------------------------------------------------------------ decode
     def decode(self, tokens: np.ndarray) -> jnp.ndarray:

@@ -42,6 +42,7 @@ class RequestState:
     base_key: Optional[np.ndarray] = None   # [2] uint32 PRNG stream root
     shim: Optional[object] = None  # legacy Request to mirror timestamps to
     text: str = ""                 # detokenized output accumulated so far
+    last_event_t: Optional[float] = None  # previous token-bearing event (ITL)
 
     @property
     def prompt_token_ids(self) -> List[int]:
@@ -53,12 +54,55 @@ class RequestState:
 
 @dataclass
 class Sequence:
-    """A running request bound to a decode slot + physical KV blocks."""
+    """A running request bound to a decode slot + physical KV blocks.
+
+    ``computed_len`` tracks how much of the prompt has been prefilled
+    into the KV pool; while ``computed_len < len(req.prompt)`` the
+    sequence is mid-prefill (chunked admission) and must not decode.
+    Whole-prompt admission sets it to the full prompt length up front.
+    """
     req: RequestState
     slot: int
     block_ids: List[int]
     seq_len: int                   # tokens in cache (incl. last fed)
     last_token: int
+    computed_len: int = 0          # prompt tokens already in the KV pool
+
+    @property
+    def prefilling(self) -> bool:
+        return self.computed_len < len(self.req.prompt)
+
+
+@dataclass
+class PrefillChunk:
+    """One ``(sequence, chunk_start, chunk_len)`` prefill assignment."""
+    seq: Sequence
+    start: int                     # == seq.computed_len at planning time
+    length: int
+
+    @property
+    def last(self) -> bool:
+        return self.start + self.length >= len(self.seq.req.prompt)
+
+
+@dataclass
+class StepPlan:
+    """One token-budget engine iteration, planned entirely on the host.
+
+    ``decode_slots`` decode ``horizon`` tokens each (blocks already
+    grown, ``cow_pairs`` pending on device); ``prefill`` chunks run
+    after, newest admissions included.  ``used <= budget`` always.
+    """
+    decode_slots: List[int]
+    horizon: int
+    cow_pairs: List[tuple]
+    prefill: List[PrefillChunk]
+    budget: int
+
+    @property
+    def used(self) -> int:
+        return (len(self.decode_slots) * self.horizon
+                + sum(c.length for c in self.prefill))
 
 
 class Scheduler:
@@ -85,6 +129,7 @@ class Scheduler:
         self.ring_only = ring_only
         self.metrics = metrics if metrics is not None else {
             "preemptions": 0, "truncated_prompts": 0}
+        self.metrics.setdefault("preemptions_mid_prefill", 0)
         self.waiting: List[RequestState] = []
         self.running: Dict[int, Sequence] = {}
         self.finished: List[RequestState] = []
@@ -104,22 +149,26 @@ class Scheduler:
         self.waiting.append(req)
 
     # ------------------------------------------------------------ admission
+    def _clamp_prompt(self, req: RequestState) -> None:
+        """Prompts longer than the per-sequence KV capacity are clamped at
+        admission instead of crashing the prefill scatter.  Requeued
+        preempted sequences — whose prompt+output never exceeds cap — are
+        never clamped and keep their full context."""
+        if len(req.prompt) > self.cap_tokens:
+            req.prompt = req.prompt[:self.cap_tokens]
+            # keep prompt_token_ids == the prompt actually served, so
+            # a later preemption fold is never reported as prompt
+            req.prompt_len0 = min(req.prompt_len0, self.cap_tokens)
+            self.metrics["truncated_prompts"] += 1
+
     def try_admit(self) -> List[Sequence]:
-        """Admit FIFO while slots and (watermarked) blocks allow; returns
+        """Whole-prompt admission (the stop-the-world parity oracle):
+        admit FIFO while slots and (watermarked) blocks allow; returns
         the newly admitted sequences — the caller must prefill them."""
         admitted: List[Sequence] = []
         while self.waiting and self.free_slots:
             req = self.waiting[0]
-            if len(req.prompt) > self.cap_tokens:
-                # prompt would overflow the mb-wide block table: clamp it
-                # instead of crashing the prefill scatter. Requeued
-                # preempted sequences — whose prompt+output never exceeds
-                # cap — are never clamped and keep their full context.
-                req.prompt = req.prompt[:self.cap_tokens]
-                # keep prompt_token_ids == the prompt actually served, so
-                # a later preemption fold is never reported as prompt
-                req.prompt_len0 = min(req.prompt_len0, self.cap_tokens)
-                self.metrics["truncated_prompts"] += 1
+            self._clamp_prompt(req)
             need = (len(req.prompt) + self.alloc.block_size - 1) \
                 // self.alloc.block_size + 1
             if not self.alloc.can_allocate(need):
@@ -128,7 +177,8 @@ class Scheduler:
             block_ids, _reused = self.alloc.allocate_prompt(req.prompt)
             slot = self.free_slots.pop()
             seq = Sequence(req=req, slot=slot, block_ids=block_ids,
-                           seq_len=len(req.prompt), last_token=req.prompt[-1])
+                           seq_len=len(req.prompt), last_token=req.prompt[-1],
+                           computed_len=len(req.prompt))
             self.running[slot] = seq
             admitted.append(seq)
         return admitted
@@ -168,6 +218,11 @@ class Scheduler:
         self.alloc.free_sequence(s.block_ids)
         self.free_slots.append(slot)
         self.metrics["preemptions"] += 1
+        if s.prefilling:
+            # partially-computed prompt: blocks freed, and because the
+            # Sequence record dies here, re-admission restarts the chunk
+            # walk from computed_len = 0 (recompute-style, like decode)
+            self.metrics["preemptions_mid_prefill"] += 1
         # recompute-style preemption: requeue with prompt+generated prefix.
         # ``folded`` tracks how much of ``output`` a previous preemption
         # already folded in, so a second preemption replaces that suffix
@@ -179,27 +234,36 @@ class Scheduler:
         return s.req
 
     # ------------------------------------------------------------ horizon
+    def decodable(self) -> Dict[int, Sequence]:
+        """Running sequences whose prompt is fully in the KV pool — the
+        only ones a decode dispatch may touch (mid-prefill sequences hold
+        their slot and blocks but contribute no decode work)."""
+        return {sl: s for sl, s in self.running.items() if not s.prefilling}
+
     def plan_horizon(self, max_horizon: int) -> int:
-        """steps_until_boundary: the longest horizon every running sequence
-        can decode without host intervention — bounded by tokens remaining
-        (finish boundary) and by free KV blocks (allocation boundary).
-        Preempts the youngest sequence if even a single step cannot fit."""
-        while self.running:
+        """steps_until_boundary: the longest horizon every decodable
+        sequence can decode without host intervention — bounded by tokens
+        remaining (finish boundary) and by free KV blocks (allocation
+        boundary).  Preempts the youngest *running* sequence (possibly a
+        mid-prefill one) if even a single step cannot fit."""
+        while True:
+            dec = list(self.decodable().values())
+            if not dec:
+                return 0
             h = min(max_horizon,
                     min(min(s.req.tokens_remaining(), self.writes_left(s))
-                        for s in self.running.values()))
+                        for s in dec))
             h = max(1, h)
             if self.ring_only:
                 return h
             while h >= 1:
                 need = sum(
                     self.alloc.blocks_needed(s.block_ids, s.seq_len - 1, h)
-                    for s in self.running.values())
+                    for s in dec)
                 if need <= self.alloc.num_free:
                     return h
                 h -= 1                   # linear: blocks_needed is monotone
             self.preempt_youngest()
-        return 0
 
     def grow_for_horizon(self, h: int) -> List[tuple]:
         """Pre-allocate every KV block an ``h``-step horizon will touch
@@ -208,10 +272,127 @@ class Scheduler:
         cow_pairs = []
         if self.ring_only:
             return cow_pairs                     # ring cache: fixed blocks
-        for slot in sorted(self.running):
+        for slot in sorted(self.decodable()):
             s = self.running[slot]
             pos = s.seq_len - 1                  # position the next write hits
             s.block_ids, cow = self.alloc.grow(s.block_ids, pos, h)
             if cow is not None:
                 cow_pairs.append(cow)
         return cow_pairs
+
+    # ------------------------------------------------------------ step plan
+    def _pool_feasible(self, req: RequestState) -> bool:
+        """Whether the (clamped) prompt could EVER fit this pool whole —
+        the same bound whole-prompt admission enforces.  Infeasible
+        prompts stay waiting without blocking anything else."""
+        n = min(len(req.prompt), self.cap_tokens)
+        return -(-n // self.alloc.block_size) + 1 \
+            <= self.alloc.num_blocks - self.alloc.watermark
+
+    def _chunk_fit(self, block_ids: List[int], start: int, want: int) -> int:
+        """Largest chunk length <= ``want`` whose KV blocks fit the free
+        pool right now (prefill chunks never CoW: a chunk's boundary block
+        is either this sequence's private partial tail or a fresh block)."""
+        bs = self.alloc.block_size
+        slack = len(block_ids) * bs - start      # room in allocated blocks
+        return min(want, max(0, slack) + self.alloc.num_free * bs)
+
+    def _prefill_runnable(self) -> bool:
+        """Whether at least one prefill chunk could actually be scheduled
+        THIS step — the only case worth pinning the decode horizon to 1
+        for.  A mid-prefill sequence must have room for >= 1 token; a
+        waiting prompt additionally needs a free slot, a pool it can
+        ever fit, and watermarked headroom right now.  Anything else
+        (full slots, zero headroom, forever-infeasible head) cannot
+        progress regardless, so decodes keep the full fused horizon."""
+        for s in self.running.values():
+            if s.prefilling and \
+                    self._chunk_fit(s.block_ids, s.computed_len, 1) > 0:
+                return True
+        return bool(self.waiting and self.free_slots
+                    and self._pool_feasible(self.waiting[0])
+                    and self.alloc.num_free > self.alloc.watermark)
+
+    def plan_step(self, max_num_batched_tokens: int,
+                  max_horizon: int = 1) -> StepPlan:
+        """Fill one token budget: running decodes first (decode-priority,
+        so inter-token latency stays bounded), then prefill *chunks* of
+        partially-admitted prompts, then fresh admissions into whatever
+        budget remains.  Block allocation is incremental — each chunk
+        grows only the blocks it will write — and decode blocks are
+        reserved before any chunk's, so a prompt can never starve the
+        decodes out of their next write.
+
+        While prefill work is pending the decode horizon is pinned to 1
+        (one decode token per sequence per iteration interleaved with
+        chunks); with no prefill in flight the full fused horizon is
+        planned, recovering the megastep steady state."""
+        budget = max_num_batched_tokens
+        h = self.plan_horizon(1 if self._prefill_runnable()
+                              else min(max_horizon,
+                                       max(1, budget
+                                           // max(1, len(self.decodable())))))
+        cow = self.grow_for_horizon(h) if h else []
+        dec_slots = sorted(self.decodable()) if h else []
+        if len(dec_slots) * h > budget:
+            # degenerate budget <= decodable count (the engine forbids it,
+            # but StepPlan's used <= budget contract holds standalone too):
+            # the overflow slots simply sit this iteration out — their
+            # pre-grown blocks stay owned and they decode next step
+            dec_slots = dec_slots[:budget // h]
+        rem = budget - len(dec_slots) * h
+        chunks: List[PrefillChunk] = []
+        # continue partially-prefilled prompts first, oldest arrival first
+        for s in sorted((s for s in self.running.values() if s.prefilling),
+                        key=lambda s: (s.req.arrival, s.slot)):
+            if rem <= 0:
+                break
+            want = min(rem, len(s.req.prompt) - s.computed_len)
+            length = self._chunk_fit(s.block_ids, s.computed_len, want)
+            if length <= 0:
+                continue
+            s.block_ids, _ = self.alloc.grow(s.block_ids, s.computed_len,
+                                             length)
+            chunks.append(PrefillChunk(seq=s, start=s.computed_len,
+                                       length=length))
+            rem -= length
+        # fresh admissions: first chunk is watermark-gated like whole-
+        # prompt admission; full blocks are content-addressed so prefix
+        # reuse still applies to whatever the first chunk covers
+        while rem > 0 and self.waiting and self.free_slots:
+            req = self.waiting[0]
+            self._clamp_prompt(req)
+            bs = self.alloc.block_size
+            if not self._pool_feasible(req):
+                # the whole prompt can never fit this pool: leave it
+                # waiting (exactly like whole-prompt admission) instead
+                # of parking a forever-stuck partial prefill on blocks
+                break
+            length = min(rem, len(req.prompt))
+            headroom = (self.alloc.num_free - self.alloc.watermark) * bs
+            length = min(length, max(0, headroom))
+            if length <= 0:
+                break
+            self.waiting.pop(0)
+            block_ids, _ = self.alloc.allocate_prompt(req.prompt[:length])
+            slot = self.free_slots.pop()
+            seq = Sequence(req=req, slot=slot, block_ids=block_ids,
+                           seq_len=0, last_token=req.prompt[-1],
+                           computed_len=0)
+            self.running[slot] = seq
+            chunks.append(PrefillChunk(seq=seq, start=0, length=length))
+            rem -= length
+        if not dec_slots and not chunks and len(self.running) > 1 \
+                and any(s.prefilling for s in self.running.values()):
+            # every runnable path is blocked on KV blocks held by newer
+            # sequences: evict the youngest so the oldest makes progress
+            # next iteration instead of deadlocking
+            self.preempt_youngest()
+        return StepPlan(decode_slots=dec_slots, horizon=h, cow_pairs=cow,
+                        prefill=chunks, budget=budget)
+
+    def complete_chunk(self, chunk: PrefillChunk) -> None:
+        """Advance host bookkeeping after the device executed a chunk."""
+        s = chunk.seq
+        s.computed_len = chunk.start + chunk.length
+        s.seq_len = s.computed_len
