@@ -42,7 +42,8 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.paged_cache import (copy_blocks, gather_kv, write_decode_kv,
+from repro.core.paged_cache import (copy_blocks, gather_kv,
+                                    gather_kv_bounded, write_decode_kv,
                                     write_prefill_kv)
 
 INT8_MAX = 127.0
@@ -259,6 +260,33 @@ def gather_kv_quant(values: jnp.ndarray, scales: jnp.ndarray, layer,
                      *values.shape[3:])[:, :max_len].astype(dtype)
 
 
+def gather_kv_quant_bounded(values: jnp.ndarray, scales: jnp.ndarray, layer,
+                            block_table: jnp.ndarray, max_len: int,
+                            num_live_blocks, dtype=jnp.float32
+                            ) -> jnp.ndarray:
+    """``gather_kv_quant`` bounded by a *traced* live-page count: only the
+    first ``num_live_blocks`` table entries are read and dequantized (one
+    page per ``fori_loop`` iteration), the rest of the static
+    ``[B, max_len, KV, D]`` view stays zero — O(live) dequant work
+    instead of O(capacity) per layer per chunk."""
+    bs = values.shape[2]
+    nb = -(-max_len // bs)
+    B = block_table.shape[0]
+    buf = jnp.zeros((B, nb, bs) + values.shape[3:], dtype)
+
+    def body(j, buf):
+        blk = block_table[:, j]                            # [B]
+        page = dequantize_blocks(values[layer, blk],
+                                 scales[layer, blk]).astype(dtype)
+        return jax.lax.dynamic_update_slice_in_dim(buf, page[:, None], j,
+                                                   axis=1)
+
+    buf = jax.lax.fori_loop(
+        0, jnp.minimum(jnp.asarray(num_live_blocks, jnp.int32), nb),
+        body, buf)
+    return buf.reshape(B, nb * bs, *values.shape[3:])[:, :max_len]
+
+
 def copy_blocks_quant(values: jnp.ndarray, scales: jnp.ndarray,
                       src: jnp.ndarray, dst: jnp.ndarray
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -299,6 +327,27 @@ def kv_write_decode(cache: KVCache, layer, k, v, block_table,
     return cache._replace(
         k=write_decode_kv(cache.k, layer, k, block_table, positions),
         v=write_decode_kv(cache.v, layer, v, block_table, positions))
+
+
+def kv_gather_bounded(cache: KVCache, layer, block_table, max_len: int,
+                      num_live_blocks, dtype
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``kv_gather`` whose page walk stops at ``num_live_blocks`` (traced):
+    the serving chunk path's O(total_len) gather — see
+    ``gather_kv_bounded``; positions past the live pages are zeros, which
+    downstream causal masking makes indistinguishable from the
+    full-capacity gather."""
+    if cache.quantized:
+        return (gather_kv_quant_bounded(cache.k, cache.k_scale, layer,
+                                        block_table, max_len,
+                                        num_live_blocks, dtype),
+                gather_kv_quant_bounded(cache.v, cache.v_scale, layer,
+                                        block_table, max_len,
+                                        num_live_blocks, dtype))
+    return (gather_kv_bounded(cache.k, layer, block_table, max_len,
+                              num_live_blocks).astype(dtype),
+            gather_kv_bounded(cache.v, layer, block_table, max_len,
+                              num_live_blocks).astype(dtype))
 
 
 def kv_gather(cache: KVCache, layer, block_table, max_len: int,

@@ -136,6 +136,72 @@ class BlockAllocator:
         self.stats["reused"] += reused
         return ids, reused
 
+    def register_full_block(self, block_id: int,
+                            tokens: Sequence[int]) -> None:
+        """Content-address a block *after* allocation (register-on-write).
+
+        ``allocate_prompt`` hashes only the full blocks of the tokens it
+        is given — for a chunked admission, just the first chunk.  Blocks
+        grown for continuation chunks become hashable only once the chunk
+        that fills them has executed; the scheduler calls this with the
+        prompt prefix through the block's last token.  No-ops when prefix
+        reuse is off, when the block is already content-addressed (it was
+        itself a reused prefix block), or when another live block owns
+        the hash (first writer wins; we cannot retroactively dedupe a
+        block that is already scattered into the pool).
+        """
+        if not self.enable_prefix_reuse:
+            return
+        blk = self._blocks[block_id]
+        assert blk.ref > 0, f"register_full_block of freed block {block_id}"
+        if blk.token_hash is not None:
+            return
+        h = self._hash_prefix(tokens)
+        if h in self._hash_to_block:
+            return
+        blk.token_hash = h
+        self._hash_to_block[h] = block_id
+
+    def grow_prefill(self, block_ids: List[int], start_pos: int,
+                     num_tokens: int, tokens: Sequence[int]
+                     ) -> Tuple[List[int], int]:
+        """``grow`` for a prefill chunk, with content-addressed reuse.
+
+        Any *new* block the chunk will completely cover (the chunk writes
+        all ``block_size`` of its slots) may instead share an existing
+        block whose registered hash matches ``tokens`` up to that block's
+        end — the continuation-chunk counterpart of ``allocate_prompt``'s
+        prefix reuse.  Safe because the chunk then rewrites the shared
+        block with bit-identical content (same tokens, same absolute
+        positions, deterministic projections — and a fully-covered block
+        is always a *fresh* quantize in int8 mode, never a boundary
+        merge).  Partially-covered blocks (the chunk's tail) stay
+        private raw allocations.  Prefill chunks never CoW: ``start_pos``
+        is this sequence's own computed length, so the current tail is
+        private.  Returns (block_ids, num_reused_blocks).
+        """
+        assert not self._tail_needs_cow(block_ids, start_pos)
+        if self.blocks_needed(block_ids, start_pos, num_tokens) \
+                > self.num_free:
+            raise OutOfBlocksError("KV block pool exhausted")
+        block_ids = list(block_ids)
+        end = start_pos + num_tokens
+        reused = 0
+        while len(block_ids) * self.block_size < end:
+            i = len(block_ids)                       # next block index
+            blk_end = (i + 1) * self.block_size
+            if self.enable_prefix_reuse and blk_end <= end:
+                h = self._hash_prefix(tokens[:blk_end])
+                b = self._hash_to_block.get(h)
+                if b is not None:
+                    self._blocks[b].ref += 1
+                    block_ids.append(b)
+                    reused += 1
+                    continue
+            block_ids.append(self._alloc_raw())
+        self.stats["reused"] += reused
+        return block_ids, reused
+
     def append_slot(self, block_ids: List[int], seq_len: int) -> Tuple[List[int], Optional[int]]:
         """Ensure capacity for one more token at position seq_len.
 
@@ -259,6 +325,37 @@ def write_prefill_kv(pool: jnp.ndarray, layer: int, k: jnp.ndarray,
     flat_idx = jnp.where(valid.reshape(-1), flat_idx, NB * BS)   # OOB -> dropped
     lp = lp.at[flat_idx].set(upd, mode="drop")
     return pool.at[layer].set(lp.reshape(NB, BS, *pool.shape[3:]))
+
+
+def gather_kv_bounded(pool: jnp.ndarray, layer, block_table: jnp.ndarray,
+                      max_len: int, num_live_blocks) -> jnp.ndarray:
+    """``gather_kv`` that only touches the first ``num_live_blocks``
+    (a *traced* count) table entries: the returned ``[B, max_len, ...]``
+    view has zeros past the live pages instead of stale pool contents.
+
+    The output shape stays static (``max_len``) — what becomes bounded is
+    the *work*: a ``fori_loop`` with a dynamic trip count copies one page
+    per live table entry, so a chunk-prefill gather costs
+    O(ceil(total_len / BS)) page reads instead of O(table capacity) per
+    layer per chunk.  Downstream attention masks every position past the
+    live length to -inf before the softmax max, so zeros vs stale data is
+    invisible in the output — the full-capacity gather path and this one
+    are bitwise interchangeable.
+    """
+    bs = pool.shape[2]
+    nb = -(-max_len // bs)
+    B = block_table.shape[0]
+    buf = jnp.zeros((B, nb, bs) + pool.shape[3:], pool.dtype)
+
+    def body(j, buf):
+        page = pool[layer, block_table[:, j]]          # [B, bs, ...]
+        return jax.lax.dynamic_update_slice_in_dim(buf, page[:, None], j,
+                                                   axis=1)
+
+    buf = jax.lax.fori_loop(
+        0, jnp.minimum(jnp.asarray(num_live_blocks, jnp.int32), nb),
+        body, buf)
+    return buf.reshape(B, nb * bs, *pool.shape[3:])[:, :max_len]
 
 
 def gather_kv(pool: jnp.ndarray, layer: int, block_table: jnp.ndarray,

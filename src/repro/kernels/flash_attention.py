@@ -99,6 +99,245 @@ def _fa_kernel(slopes_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
 
 
+def _fa_chunk_kernel(block_table_ref, info_ref,      # scalar prefetch (SMEM)
+                     slopes_ref, q_ref, *refs,
+                     block_q: int, block_size: int, num_pool_blocks: int,
+                     num_raw_blocks: int, use_alibi: bool,
+                     sliding_window: int, quantized: bool):
+    """Dynamic-offset chunk-prefill flash body (one sequence).
+
+    The K axis of the grid walks TWO sources: the first
+    ``num_pool_blocks`` steps are paged-pool pages holding the already-
+    prefilled prefix ``[0, q_offset)`` (physical page ids resolved from
+    the prefetched block table, exactly like ``paged_attention.py``), the
+    remaining ``num_raw_blocks`` steps are the chunk's own raw K/V tiles
+    at absolute positions ``[q_offset, q_offset + W)`` — the chunk
+    attends its own tokens unquantized / un-roundtripped, matching the
+    whole-prompt prefill semantics (and keeping int8 parity).
+
+    ``info_ref`` holds the two *traced* scalars ``[q_offset, total_len]``
+    — the causal mask, ALiBi distances and the live-page clamp are all
+    computed from them, so every chunk of every prompt runs from one
+    compiled executable.  ``quantized`` reuses the in-register dequant
+    of ``paged_attention_quant.py``: pool tiles are int8 with one f32
+    scale per (page, kv head); raw tiles are always full precision.
+    """
+    if quantized:
+        (kp_ref, ks_ref, vp_ref, vs_ref, kr_ref, vr_ref,
+         o_ref, acc_ref, m_ref, l_ref) = refs
+    else:
+        kp_ref, vp_ref, kr_ref, vr_ref, o_ref, acc_ref, m_ref, l_ref = refs
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    q_off = info_ref[0]
+    tlen = info_ref[1]
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = q_off + iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_size), 0)
+
+    def _accum(k, v, k_pos, mask):
+        q = q_ref[0].astype(jnp.float32)                   # [G, Tq, D]
+        scale = q.shape[-1] ** -0.5
+        s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        dist = q_pos - k_pos                               # [Tq, Tk]
+        if use_alibi:
+            slopes = slopes_ref[0].astype(jnp.float32)     # [G]
+            s = s - slopes[:, None, None] \
+                * jnp.maximum(dist, 0)[None].astype(jnp.float32)
+        if sliding_window > 0:
+            mask &= dist < sliding_window
+        s = jnp.where(mask[None], s, NEG_INF)
+        m_prev = m_ref[...]                                # [G, Tq]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])                  # [G, Tq, Tk]
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+
+    # ---- pool pages: the prefix [0, q_offset). Pages past the prefix
+    # are skipped (their DMA re-resolved to the last live page, compute
+    # gated off) — the HBM walk is ceil(q_offset / block_size), never
+    # the static table capacity.
+    def _pool():
+        k = kp_ref[0, :, 0, :].astype(jnp.float32)         # [BS, D]
+        v = vp_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
+        k_pos = ik * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_size), 1)
+        _accum(k, v, k_pos, k_pos < q_off)
+
+    pool_live = jnp.logical_and(ik < num_pool_blocks,
+                                ik * block_size < q_off)
+    if sliding_window > 0:
+        pool_live = jnp.logical_and(
+            pool_live,
+            (ik + 1) * block_size - 1 > q_off + iq * block_q
+            - sliding_window)
+    pl.when(pool_live)(_pool)
+
+    # ---- raw chunk tiles: positions [q_offset, q_offset + W), causal
+    # within the chunk; padded tail positions masked by total_len.
+    def _raw():
+        j = ik - num_pool_blocks
+        k = kr_ref[0, 0].astype(jnp.float32)               # [BS, D]
+        v = vr_ref[0, 0].astype(jnp.float32)
+        k_pos = q_off + j * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_size), 1)
+        _accum(k, v, k_pos, (k_pos < tlen) & (q_pos - k_pos >= 0))
+
+    j = ik - num_pool_blocks
+    raw_live = jnp.logical_and(
+        ik >= num_pool_blocks,
+        jnp.logical_and(j * block_size <= iq * block_q + block_q - 1,
+                        q_off + j * block_size < tlen))
+    if sliding_window > 0:
+        raw_live = jnp.logical_and(
+            raw_live,
+            (j + 1) * block_size - 1 > iq * block_q - sliding_window)
+    pl.when(raw_live)(_raw)
+
+    @pl.when(ik == num_pool_blocks + num_raw_blocks - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sliding_window", "block_q", "interpret"))
+def flash_attention_chunk(
+    q: jnp.ndarray,                  # [1, W, H, D] — one chunk, one sequence
+    k_pool: jnp.ndarray,             # [NB, BS, KV, D] (int8 when quantized)
+    v_pool: jnp.ndarray,
+    block_table: jnp.ndarray,        # [1, MB] int32
+    q_offset: jnp.ndarray,           # i32 scalar (traced)
+    total_len: jnp.ndarray,          # i32 scalar (traced): q_offset + live len
+    k_raw: jnp.ndarray,              # [1, W, KV, D] — the chunk's own K/V
+    v_raw: jnp.ndarray,
+    alibi_slopes: Optional[jnp.ndarray] = None,   # [H]
+    *,
+    k_scales: Optional[jnp.ndarray] = None,       # [NB, KV] f32 (int8 pools)
+    v_scales: Optional[jnp.ndarray] = None,
+    sliding_window: int = 0,
+    block_q: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Chunk-prefill attention straight over the paged pool (TPU serving).
+
+    The dynamic-offset counterpart of ``flash_attention``: ``q_offset``
+    and ``total_len`` are *device scalars* (scalar-prefetch operands), so
+    the fixed-shape ``[1, W]`` serving chunk executable needs no gather
+    of the pool to a contiguous ``[cap]`` view and no per-offset
+    recompile — the page walk is bounded by the live prefix length the
+    way ``paged_attention`` bounds its decode walk.  Causality within the
+    chunk is handled by raw-tile masking; the chunk's own K/V come from
+    ``k_raw``/``v_raw`` (never pool-roundtripped, so int8 quantization
+    noise only enters for *earlier* chunks' positions — identical
+    semantics to the XLA oracle in ``ref.chunk_prefill_attention_ref``).
+    """
+    B, W, H, D = q.shape
+    assert B == 1, "chunk executable serves one sequence per dispatch"
+    NB, BS, KV, _ = k_pool.shape
+    G = H // KV
+    MB = block_table.shape[1]
+    quantized = k_scales is not None
+    use_alibi = alibi_slopes is not None
+    slopes = (alibi_slopes.reshape(KV, G) if use_alibi
+              else jnp.zeros((KV, G), jnp.float32))
+
+    bq = min(block_q, W)
+    pq = (-W) % bq
+    nq = (W + pq) // bq
+    pr = (-W) % BS
+    nr = (W + pr) // BS                              # raw chunk K tiles
+    qg = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))[0] \
+        .reshape(W + pq, KV, G, D).transpose(1, 2, 0, 3)   # [KV, G, Wq, D]
+    kr = jnp.pad(k_raw, ((0, 0), (0, pr), (0, 0), (0, 0)))[0] \
+        .transpose(1, 0, 2).reshape(KV, nr, BS, D)
+    vr = jnp.pad(v_raw, ((0, 0), (0, pr), (0, 0), (0, 0)))[0] \
+        .transpose(1, 0, 2).reshape(KV, nr, BS, D)
+    info = jnp.stack([jnp.asarray(q_offset, jnp.int32),
+                      jnp.asarray(total_len, jnp.int32)])
+
+    kernel = functools.partial(
+        _fa_chunk_kernel, block_q=bq, block_size=BS, num_pool_blocks=MB,
+        num_raw_blocks=nr, use_alibi=use_alibi,
+        sliding_window=sliding_window, quantized=quantized)
+
+    def page_map(h, iq, ik, bt, info):
+        # pages past the live prefix re-resolve to its last live page
+        # (Pallas skips the DMA when consecutive steps map to the same
+        # block), so the walk is bounded by ceil(q_offset / BS).
+        return (bt[0, _chunk_clamp(ik, info[0], BS, MB)], 0, h, 0)
+
+    def scale_map(h, iq, ik, bt, info):
+        return (bt[0, _chunk_clamp(ik, info[0], BS, MB)], h)
+
+    def raw_map(h, iq, ik, bt, info):
+        return (h, jnp.clip(ik - MB, 0, nr - 1), 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, G), lambda h, iq, ik, bt, info: (h, 0)),
+        pl.BlockSpec((1, G, bq, D), lambda h, iq, ik, bt, info: (h, 0, iq, 0)),
+        pl.BlockSpec((1, BS, 1, D), page_map),
+    ]
+    args = [k_pool]
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, 1), scale_map))
+        args.append(k_scales)
+    in_specs.append(pl.BlockSpec((1, BS, 1, D), page_map))
+    args.append(v_pool)
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, 1), scale_map))
+        args.append(v_scales)
+    in_specs += [pl.BlockSpec((1, 1, BS, D), raw_map),
+                 pl.BlockSpec((1, 1, BS, D), raw_map)]
+    args += [kr, vr]
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,                 # block_table, [off, len]
+            grid=(KV, nq, MB + nr),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, G, bq, D),
+                                   lambda h, iq, ik, bt, info: (h, 0, iq, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, bq, D), jnp.float32),
+                pltpu.VMEM((G, bq), jnp.float32),
+                pltpu.VMEM((G, bq), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((KV, G, W + pq, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table, info, slopes, qg, *args)
+
+    return out.transpose(2, 0, 1, 3).reshape(1, W + pq, H, D)[:, :W]
+
+
+def _chunk_clamp(i, prefix_len, block_size, num_table_blocks):
+    """Clamp K-grid step ``i`` to the prefix's last live table entry
+    (``prefix_len`` may be 0 on a first chunk: clamp to entry 0, the
+    kernel's ``pool_live`` guard skips the compute anyway)."""
+    last = jnp.maximum((prefix_len + block_size - 1) // block_size, 1) - 1
+    return jnp.minimum(jnp.minimum(i, num_table_blocks - 1), last)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "sliding_window", "block_q", "block_k",

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.flash_attention import (
+    flash_attention_chunk as _flash_chunk_pallas)
 from repro.kernels.paged_attention import paged_attention as _paged_pallas
 from repro.kernels.paged_attention_quant import (
     paged_attention_quant as _paged_quant_pallas)
@@ -45,6 +47,42 @@ def flash_attention(q, k, v, alibi_slopes=None, *, causal=True,
     return _ref.flash_attention_ref(q, k, v, causal=causal,
                                     sliding_window=sliding_window,
                                     alibi_slopes=alibi_slopes, q_offset=q_offset)
+
+
+def chunk_prefill_attention(q, k_pool, v_pool, k_scales, v_scales, layer,
+                            block_table, q_offset, total_len, k_raw, v_raw,
+                            alibi_slopes=None, *, sliding_window=0,
+                            use_pallas: Optional[bool] = None,
+                            interpret: Optional[bool] = None):
+    """Serving chunk-prefill attention with a *traced* ``q_offset``.
+
+    One chunk of one sequence attends over the paged pool's live prefix
+    plus its own raw K/V — the Pallas path walks the pool pages directly
+    (scalar-prefetch block table, page walk clamped to the live prefix,
+    in-register int8 dequant when scales are given); the XLA path is the
+    bounded-gather + raw-overlay oracle in ``ref.py``.  Both cost
+    O(total_len) pool bytes per layer per chunk, never O(capacity).
+
+    q: [1, W, H, D]; k_pool/v_pool: [L, NB, BS, KV, D]; k_scales/
+    v_scales: [L, NB, KV] f32 or None (bf16 pools); layer: traced layer
+    index; block_table: [1, MB]; q_offset/total_len: traced i32 scalars;
+    k_raw/v_raw: [1, W, KV, D] (the chunk's own full-precision K/V).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        quant = k_scales is not None
+        return _flash_chunk_pallas(
+            q, k_pool[layer], v_pool[layer], block_table, q_offset,
+            total_len, k_raw, v_raw, alibi_slopes,
+            k_scales=k_scales[layer] if quant else None,
+            v_scales=v_scales[layer] if quant else None,
+            sliding_window=sliding_window,
+            interpret=(not _on_tpu()) if interpret is None else interpret)
+    return _ref.chunk_prefill_attention_ref(
+        q, k_pool, v_pool, k_scales, v_scales, layer, block_table,
+        q_offset, total_len, k_raw, v_raw, alibi_slopes=alibi_slopes,
+        sliding_window=sliding_window)
 
 
 def paged_attention(q, k_pool, v_pool, block_table, seq_lens,

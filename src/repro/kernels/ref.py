@@ -9,6 +9,7 @@ from __future__ import annotations
 
 from typing import Dict, Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.gqa import decode_attention, grouped_attention
@@ -58,6 +59,49 @@ def paged_attention_quant_ref(q, k_values, k_scales, v_values, v_scales,
                          max_len)
     return decode_attention(q, kc, vc, seq_lens, alibi_slopes=alibi_slopes,
                             sliding_window=sliding_window)
+
+
+def chunk_prefill_attention_ref(q, k_pool, v_pool, k_scales, v_scales,
+                                layer, block_table, q_offset, total_len,
+                                k_raw, v_raw, *, alibi_slopes=None,
+                                sliding_window=0):
+    """Chunk-prefill attention over the paged pool (XLA oracle).
+
+    The semantic definition of ``flash_attention_chunk``: gather the
+    pool's live pages (a *bounded* walk — ``ceil(total_len / BS)`` page
+    reads via ``kv_gather_bounded``, never the table capacity), overlay
+    the chunk's own raw K/V at ``[q_offset, q_offset + W)`` so the chunk
+    never sees itself pool-roundtripped (int8 parity), then the O(S^2)
+    grouped-attention reference with the traced ``q_offset`` driving the
+    causal mask.  This is also the lowering the serving engine runs off
+    TPU and the multi-pod dry-run compiles.
+
+    q: [1, W, H, D]; k_pool/v_pool: [L, NB, BS, KV, D] (int8 when scales
+    are given, with k_scales/v_scales [L, NB, KV] f32); layer: traced
+    index; block_table: [1, MB]; q_offset/total_len: traced i32 scalars;
+    k_raw/v_raw: [1, W, KV, D].
+    """
+    from repro.core.kv_quant import KVCache, kv_gather_bounded
+    cache = KVCache(k_pool, v_pool, k_scales, v_scales)
+    bs = cache.block_size
+    cap = block_table.shape[1] * bs
+    W = q.shape[1]
+    live = (jnp.asarray(total_len, jnp.int32) + bs - 1) // bs
+    kc, vc = kv_gather_bounded(cache, layer, block_table, cap, live,
+                               q.dtype)
+    # raw overlay: the W-row scratch tail keeps the dynamic write from
+    # clamping when a chunk ends at capacity (same trick as the serving
+    # chunk executable always used).
+    scratch = jnp.zeros((1, W) + kc.shape[2:], kc.dtype)
+    kc = jax.lax.dynamic_update_slice(
+        jnp.concatenate([kc, scratch], 1), k_raw.astype(kc.dtype),
+        (0, q_offset, 0, 0))[:, :cap]
+    vc = jax.lax.dynamic_update_slice(
+        jnp.concatenate([vc, scratch], 1), v_raw.astype(vc.dtype),
+        (0, q_offset, 0, 0))[:, :cap]
+    return grouped_attention(q, kc, vc, causal=True,
+                             sliding_window=sliding_window,
+                             alibi_slopes=alibi_slopes, q_offset=q_offset)
 
 
 def quant_matmul_ref(x: jnp.ndarray, params: Dict[str, jnp.ndarray]) -> jnp.ndarray:

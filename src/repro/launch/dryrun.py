@@ -122,6 +122,17 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
         return fn, (params, state, batch)
 
     # decode
+    if chunk_tokens and T.supports_chunked_prefill(cfg):
+        # unified single-dispatch serving step: the decode cell carries
+        # the step's prefill chunk and the fused sampling too — the
+        # sharding/memory proof of the one-dispatch mixed iteration
+        batch = MR.unified_step_input_specs(cfg, shape, chunk_tokens)
+        state = batch.pop("state")
+        s_sh = state_shardings(ctx, state, cfg)
+        step = MR.make_unified_step(cfg, ctx, rt)
+        fn = jax.jit(step, in_shardings=(p_sh, s_sh, None),
+                     out_shardings=(None, s_sh), donate_argnums=(1,))
+        return fn, (params, state, batch)
     spec = MR.input_specs(cfg, shape)
     state, tokens = spec["state"], spec["tokens"]
     s_sh = state_shardings(ctx, state, cfg)

@@ -53,6 +53,12 @@ def main() -> None:
                          "stop-the-world whole-prompt prefill (the "
                          "parity oracle; also the path non-full-"
                          "attention archs always use)")
+    ap.add_argument("--enable-unified-step",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="--no-enable-unified-step restores the two-call "
+                         "mixed step (separate decode / prefill-chunk / "
+                         "sample dispatches) — the unified single-"
+                         "dispatch step's parity oracle")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -79,6 +85,7 @@ def main() -> None:
                    num_blocks=args.blocks, max_blocks_per_seq=16,
                    max_num_batched_tokens=args.max_num_batched_tokens,
                    enable_chunked_prefill=args.enable_chunked_prefill,
+                   enable_unified_step=args.enable_unified_step,
                    prefill_bucket=32)
 
     rng = np.random.default_rng(args.seed)

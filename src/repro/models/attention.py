@@ -17,7 +17,7 @@ from repro.core.alibi import alibi_slopes
 from repro.core.kv_quant import KVCache, kv_write_decode, kv_write_prefill
 from repro.kernels import ops
 from repro.models.layers import dense_init, linear, rope
-from repro.runtime.sharding import ParallelCtx, shard
+from repro.runtime.sharding import ParallelCtx, shard, shard_map
 
 Params = Dict[str, jnp.ndarray]
 
@@ -154,7 +154,7 @@ def attn_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
         # every cache leaf — value pool [L,NB,...] or scale pool [L,NB,KV]
         # — shards over dp on the blocks dim.
         leaf_specs = tuple(P(None, dp) for _ in cache_leaves)
-        o, *leaves = jax.shard_map(
+        o, *leaves = shard_map(
             island, mesh=ctx.mesh,
             in_specs=(P(dp), P(dp), P(dp), P(dp), P(dp), P(), *leaf_specs),
             out_specs=(P(dp), *leaf_specs),

@@ -25,7 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import act_fn, dense_init
-from repro.runtime.sharding import ParallelCtx
+from repro.runtime.sharding import ParallelCtx, shard_map
 
 Params = Dict[str, jnp.ndarray]
 
@@ -163,7 +163,7 @@ def moe_apply(cfg: ModelConfig, p: Params, x: jnp.ndarray,
         y = jax.lax.psum(y, tp)
         return y.reshape(xl.shape)
 
-    return jax.shard_map(
+    return shard_map(
         f, mesh=mesh,
         in_specs=(P(dp, None, None), in_specs),
         out_specs=P(dp, None, None),

@@ -72,6 +72,41 @@ def make_chunk_prefill_step(cfg: ModelConfig, ctx=None, rt=None):
     return step
 
 
+def unified_step_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                             chunk_tokens: int) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the unified single-dispatch serving step:
+    the decode cell's state + per-slot tokens, the ``[1, W]`` chunk
+    window with its scalar offsets, and the ``[B + 1]`` sampling rows
+    (decode slots + the chunk row) — the one executable a mixed engine
+    iteration dispatches."""
+    g = decode_geometry(cfg, shape)
+    B = g["max_seqs"]
+    W = min(chunk_tokens, g["max_blocks_per_seq"] * g["block_size"])
+    return {"state": decode_state_specs(cfg, shape),
+            "tokens": sds((B,), I32),
+            "sampling": {"keys": sds((B + 1, 2), jnp.uint32),
+                         "counts": sds((B + 1,), I32),
+                         "temps": sds((B + 1,), jnp.float32),
+                         "top_ks": sds((B + 1,), I32),
+                         "top_ps": sds((B + 1,), jnp.float32)},
+            "active": sds((B,), jnp.bool_),
+            "chunk_tokens": sds((1, W), I32),
+            "chunk_block_table": sds((1, g["max_blocks_per_seq"]), I32),
+            "pos_offset": sds((), I32),
+            "total_len": sds((), I32)}
+
+
+def make_unified_step(cfg: ModelConfig, ctx=None, rt=None):
+    def step(params, state, batch):
+        return T.unified_step(cfg, params, state, batch["tokens"],
+                              batch["sampling"], batch["active"],
+                              batch["chunk_tokens"],
+                              batch["chunk_block_table"],
+                              batch["pos_offset"], batch["total_len"],
+                              ctx, rt)
+    return step
+
+
 def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
     """ShapeDtypeStruct stand-ins for the step function's data arguments."""
     B, S = shape.global_batch, shape.seq_len

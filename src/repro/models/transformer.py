@@ -23,7 +23,7 @@ from repro.models.attention import (attn_apply, attn_decode, attn_init,
 from repro.models.layers import (apply_norm, embed_init, linear, mlp_apply,
                                  mlp_init, norm_init, unembed)
 from repro.models.moe import moe_apply, moe_init
-from repro.runtime.sharding import ParallelCtx, shard
+from repro.runtime.sharding import ParallelCtx, shard, shard_map
 
 Params = Dict[str, Any]
 
@@ -602,7 +602,7 @@ def _prefill_chunked(cfg: ModelConfig, params: Params, state, x, ctx_lens,
             if use_island:
                 dp = ctx.dp_axes
                 leaf_specs = tuple(P(None, dp) for _ in leaves)
-                o, *leaves = jax.shard_map(
+                o, *leaves = shard_map(
                     cache_attend, mesh=ctx.mesh,
                     in_specs=(P(dp), P(dp), P(dp), P(dp), P(dp), P(),
                               *leaf_specs),
@@ -671,13 +671,16 @@ def prefill_chunk(cfg: ModelConfig, params: Params, cache,
     total_len: i32 scalar, pos_offset + live chunk length.  Each layer
     writes the chunk's K/V into the paged pool at its absolute positions
     (int8 mode merges the boundary block via the dynamic-offset quant
-    write), then attends over the pool gathered up to the (static) table
-    capacity with the causal mask doing the live-length masking.  Padded
-    rows compute garbage that never escapes their row; the returned
-    logits ``[1, V]`` are the *last live token's* — only meaningful on a
-    prompt's final chunk.  Returns (logits, cache).
+    write), then attends over the pool's *live prefix* plus its own raw
+    K/V through ``ops.chunk_prefill_attention`` — the dynamic-offset
+    Pallas flash kernel on TPU (scalar-prefetch page walk clamped to the
+    live length), the bounded-gather XLA oracle elsewhere; either way the
+    per-layer pool traffic is O(total_len), not O(table capacity).
+    Padded rows compute garbage that never escapes their row; the
+    returned logits ``[1, V]`` are the *last live token's* — only
+    meaningful on a prompt's final chunk.  Returns (logits, cache).
     """
-    from repro.core.kv_quant import kv_gather, kv_write_prefill
+    from repro.core.kv_quant import kv_write_prefill
     from repro.kernels import ops as kops
     from repro.models.attention import _qkv, _slopes
     rt = rt or {}
@@ -685,8 +688,9 @@ def prefill_chunk(cfg: ModelConfig, params: Params, cache,
     W = tokens.shape[1]
     x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))   # [1, W, d]
     positions = pos_offset + jnp.arange(W)
+    total_len = jnp.asarray(total_len, jnp.int32)
     ctx_lens = total_len[None] if total_len.ndim == 0 else total_len
-    cap = block_table.shape[1] * cache.block_size              # static
+    total_len = ctx_lens[0]                                    # scalar form
     slopes = _slopes(cfg)
 
     def body(carry, inp):
@@ -696,30 +700,19 @@ def prefill_chunk(cfg: ModelConfig, params: Params, cache,
         q, k, v = _qkv(cfg, lp["attn"], hn, positions, ctx, rt)
         cache = kv_write_prefill(cache, li, k, v, block_table, ctx_lens,
                                  pos_offset=pos_offset)
-        kc, vc = kv_gather(cache, li, block_table, cap, q.dtype)
-        # the chunk attends its OWN tokens raw (exactly like whole-prompt
-        # prefill), not pool-roundtripped: overlay the fresh K/V onto the
-        # gathered view so int8 quantization noise only enters for
-        # *earlier* chunks' positions. The W-row scratch tail keeps the
-        # dynamic write from clamping when a chunk ends at capacity.
-        scratch = jnp.zeros((1, W) + kc.shape[2:], kc.dtype)
-        kc = jax.lax.dynamic_update_slice(
-            jnp.concatenate([kc, scratch], 1), k.astype(kc.dtype),
-            (0, pos_offset, 0, 0))[:, :cap]
-        vc = jax.lax.dynamic_update_slice(
-            jnp.concatenate([vc, scratch], 1), v.astype(vc.dtype),
-            (0, pos_offset, 0, 0))[:, :cap]
         if rt.get("skip_mixer_core"):
-            o = q * (1 + 1e-30 * (kc.sum() + vc.sum()))
+            o = q * (1 + 1e-30 * (k.sum() + v.sum()))
         else:
-            # XLA flash reference: the traced q_offset drives the causal
-            # mask, which also hides every not-yet-written pool position
-            # (a live query at absolute p only sees keys <= p, all
-            # written). A dynamic-offset Pallas flash kernel is the open
-            # TPU follow-up (ROADMAP).
-            o = kops.flash_attention(
-                q, kc, vc, slopes, causal=True, q_offset=pos_offset,
-                use_pallas=False)
+            # the chunk attends its OWN tokens raw (exactly like whole-
+            # prompt prefill), never pool-roundtripped, so int8
+            # quantization noise only enters for *earlier* chunks'
+            # positions; the traced q_offset drives the causal mask,
+            # which also hides every not-yet-written pool position.
+            o = kops.chunk_prefill_attention(
+                q, cache.k, cache.v, cache.k_scale, cache.v_scale, li,
+                block_table, pos_offset, total_len, k, v, slopes,
+                use_pallas=rt.get("use_pallas"),
+                interpret=rt.get("interpret"))
         h = h + linear(o.reshape(*o.shape[:2], -1), lp["attn"]["wo"], rt)
         hn = apply_norm(lp["mlp_norm"], h, cfg.norm, cfg.norm_eps)
         if cfg.num_experts:
@@ -743,6 +736,61 @@ def prefill_chunk(cfg: ModelConfig, params: Params, cache,
     last = jnp.take_along_axis(x, last_i[None, None, None], axis=1)[:, 0]
     logits = unembed(last, params["embed"], params.get("head"))
     return logits.astype(jnp.float32), cache
+
+
+def unified_step(cfg: ModelConfig, params: Params,
+                 state: Dict[str, jnp.ndarray], tokens: jnp.ndarray,
+                 sampling: Dict[str, jnp.ndarray], active: jnp.ndarray,
+                 chunk_tokens: jnp.ndarray, chunk_block_table: jnp.ndarray,
+                 pos_offset: jnp.ndarray, total_len: jnp.ndarray,
+                 ctx: Optional[ParallelCtx] = None,
+                 rt: Optional[dict] = None
+                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One serving iteration in ONE device dispatch: a single decode step
+    for every active slot, one prefill chunk, and per-row sampling —
+    the unified prefill/decode batch (vLLM-style) over the paged pools.
+
+    While a prompt is being chunk-prefilled the scheduler pins the decode
+    horizon to 1, which previously cost two (plus a sampling) device
+    calls per engine iteration; this executable runs the same
+    computations under one ``jit``: shared KV pools (the decode scatter
+    and the chunk scatter touch disjoint physical blocks), one paged-
+    attention + chunk-flash kernel invocation pair, and ONE
+    logits/sample readback per step.
+
+    tokens: [B] last sampled token per decode slot (seq_lens counts it;
+        slots the plan excluded carry seq_len 0, so their KV writes are
+        dropped exactly like in ``decode_megastep``);
+    sampling: padded per-row ``SamplingParams`` arrays of B + 1 rows —
+        rows [0, B) are the decode slots, row B is the chunk's request
+        (each row's key is ``fold_in(keys[r], counts[r])``, the same
+        stream position the two-call path derives, so sampled tokens are
+        bitwise identical to the megastep + batched-sample pair);
+    active: [B] bool decode mask (row gating only — the host ignores
+        inactive rows of the output);
+    chunk_tokens / chunk_block_table / pos_offset / total_len: the
+        fixed-shape ``[1, W]`` chunk executable's operands (see
+        ``prefill_chunk``).
+
+    Returns (next_tokens [B + 1] i32, new state): rows [0, B) are the
+    decode samples (inactive rows hold garbage the host drops), row B is
+    the chunk's last-live-token sample — meaningful only on a prompt's
+    final chunk.  Jit with ``donate_argnums`` on ``state``.
+    """
+    rt = rt or {}
+    logits_dec, state = decode_step(cfg, params, state, tokens, ctx, rt)
+    state = dict(state)
+    state["seq_lens"] = state["seq_lens"] + active.astype(jnp.int32)
+    cache = cache_from_state(state)
+    logits_chunk, cache = prefill_chunk(
+        cfg, params, cache, chunk_tokens, chunk_block_table, pos_offset,
+        total_len, ctx, rt)
+    state.update(cache_to_state(cache))
+    logits = jnp.concatenate([logits_dec, logits_chunk], axis=0)
+    nxt = sample_from_logits(logits, sampling["keys"], sampling["counts"],
+                             sampling["temps"], sampling["top_ks"],
+                             sampling["top_ps"])
+    return nxt, state
 
 
 def attn_prefill_ring(cfg, p, x, ctx, *, kind, cache, layer,

@@ -14,7 +14,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 from repro.optim.adamw import AdamWConfig, OptState, apply_updates, init_opt_state
-from repro.runtime.sharding import ParallelCtx, param_shardings
+from repro.runtime.sharding import (ParallelCtx, param_shardings,
+                                    shard_map)
 
 
 # --------------------------------------------------------------------------
@@ -147,7 +148,7 @@ def make_compressed_grad_fn(cfg: ModelConfig, ctx: ParallelCtx,
         return loss, g_avg, new_err[None]
 
     def f(params, batch, err):
-        return jax.shard_map(
+        return shard_map(
             local, mesh=ctx.mesh,
             in_specs=(P(), P(dp), P(dp)),
             out_specs=(P(), P(), P(dp)),

@@ -23,6 +23,17 @@ restores the stop-the-world whole-prompt wave — retained as the parity
 oracle: chunked greedy serving is token-exact against it on the
 reduced configs for both the bf16 and int8 KV pools.
 
+With ``enable_unified_step=True`` (default; needs chunked mode and
+``use_fused``) a mixed iteration — decodes interleaved with a prefill
+chunk — executes as ONE donated device dispatch: the decode step, the
+chunk (through the dynamic-offset chunk-flash path) and every row's
+sampling fused under one jit, one ``[max_slots + 1]`` token readback.
+``enable_unified_step=False`` keeps the two-call execute (decode
+dispatch, then chunk dispatch(es), then a first-token sample dispatch)
+as the unified path's token-exact / bitwise-sampling parity oracle;
+``report()['device_dispatches_per_step']`` shows the difference
+(1.0 unified vs ~2-3 two-call in the steady mixed state).
+
 Requests enter with a ``SamplingParams`` (temperature / top_k / top_p /
 seed / stop token ids / max_tokens) that is lowered to padded per-slot
 device arrays, so one batch freely mixes greedy, temperature and
@@ -89,7 +100,8 @@ class ServingEngine:
                  max_horizon: int = 8, detokenizer=None,
                  kv_cache_dtype: str = "bf16",
                  max_num_batched_tokens: int = 256,
-                 enable_chunked_prefill: bool = True):
+                 enable_chunked_prefill: bool = True,
+                 enable_unified_step: bool = True):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -105,7 +117,11 @@ class ServingEngine:
             "decode_time_s": 0.0, "truncated_prompts": 0,
             # dispatches after the first: excludes jit compile of the step
             "decode_warm_steps": 0, "decode_warm_time_s": 0.0,
-            "prefill_chunks": 0, "plan_steps": 0, "budget_tokens_used": 0}
+            "timed_decode_dispatches": 0,
+            "prefill_chunks": 0, "plan_steps": 0, "budget_tokens_used": 0,
+            # device calls per engine iteration (the unified-dispatch
+            # figure): work_steps counts iterations that dispatched at all
+            "device_dispatches": 0, "work_steps": 0}
         # sliding-window-only archs use a fixed ring cache: no block growth
         ring_only = bool(cfg.sliding_window) and not any(
             cfg.layer_kind(i) == "full" for i in range(cfg.num_layers))
@@ -131,12 +147,20 @@ class ServingEngine:
         chunk_tokens = min(self.max_num_batched_tokens,
                            self.scheduler.cap_tokens) if self.chunked \
             else None
+        # unified single-dispatch step: decode + the step's prefill chunk
+        # + sampling fused under one jit.  Needs the chunk executable
+        # (chunked mode) and the fused on-device sampling contract
+        # (use_fused) — the two-call path survives behind
+        # ``enable_unified_step=False`` as the parity oracle.
+        self.unified = bool(enable_unified_step) and self.chunked \
+            and use_fused
         self.runner = ModelRunner(cfg, params, max_slots=max_slots,
                                   num_blocks=num_blocks,
                                   max_blocks_per_seq=max_blocks_per_seq,
                                   rt=rt, max_horizon=self.max_horizon,
                                   kv_cache_dtype=kv_cache_dtype,
-                                  chunk_tokens=chunk_tokens)
+                                  chunk_tokens=chunk_tokens,
+                                  unified=self.unified)
         self.kv_cache_dtype = self.runner.kv_cache_dtype
         self._t0: Optional[float] = None
         self._next_rid = 0
@@ -342,7 +366,12 @@ class ServingEngine:
     # ------------------------------------------------------------ decode
     def _record_decode_time(self, dt: float, steps: int) -> None:
         self.metrics["decode_time_s"] += dt
-        if self.metrics["decode_dispatches"] > 1:    # past the compile call
+        # warm = past the megastep/decode compile call.  Gated on the
+        # count of *timed* decode dispatches, not decode_dispatches: an
+        # earlier unified mixed dispatch (never timed here) must not make
+        # the first pure-decode dispatch — the compile — read as warm.
+        self.metrics["timed_decode_dispatches"] += 1
+        if self.metrics["timed_decode_dispatches"] > 1:
             self.metrics["decode_warm_time_s"] += dt
             self.metrics["decode_warm_steps"] += steps
 
@@ -395,6 +424,63 @@ class ServingEngine:
                          now, outs)
         self._record_decode_time(time.perf_counter() - t0, plan.horizon)
 
+    def _dispatch_unified(self, plan: StepPlan,
+                          outs: List[RequestOutput]) -> None:
+        """Execute a mixed plan (decodes at horizon <= 1 interleaved with
+        prefill) as unified dispatches: the first fuses the decode step,
+        the step's first prefill chunk AND all sampling into ONE donated
+        device call with a single ``[max_slots + 1]`` token readback;
+        further chunks (fresh-admission bursts) each dispatch alone.  In
+        the steady mixed workload (one prompt chunking over a decoding
+        batch) that is exactly one device dispatch per engine iteration
+        — the two-call path pays a decode dispatch, a chunk dispatch and
+        a first-token sample dispatch for the same work."""
+        if plan.cow_pairs:
+            self.runner.copy_cow(plan.cow_pairs)
+        done: List[tuple] = []
+        for d in plan.unified_dispatches():
+            # device tables carry EXACTLY this dispatch's decode slots:
+            # everything else gets seq_len 0, so the decode KV scatter
+            # drops its writes (chunk-only dispatches decode nothing)
+            self.runner.sync_tables({slot: self.scheduler.running[slot]
+                                     for slot in d.decode_slots})
+            toks = np.zeros((self.max_slots,), np.int32)
+            active = np.zeros((self.max_slots,), bool)
+            recs: List[Optional[RequestState]] = [None] * self.max_slots
+            for slot in d.decode_slots:
+                toks[slot] = self.scheduler.running[slot].last_token
+                active[slot] = True
+                recs[slot] = self.scheduler.running[slot].req
+            c = d.chunk
+            recs.append(c.seq.req)          # row max_slots: the chunk
+            out = self.runner.unified_step(
+                toks, self._sampling_rows(recs), active,
+                c.seq.req.prompt, c.seq.block_ids, c.start, c.length)
+            done.append((d, out))
+            self.scheduler.complete_chunk(c)
+            self.metrics["prefill_chunks"] += 1
+            self.metrics["prompt_tokens"] += c.length
+            if d.decode_slots:
+                # decode bookkeeping rides the unified dispatch; its
+                # *timing* is not recorded — decode_step_latency_us stays
+                # a pure-decode figure (mixed dispatches include chunk
+                # compute the two-call path never timed as decode)
+                self.metrics["decode_dispatches"] += 1
+                self.metrics["decode_steps"] += 1
+        # the step's ONE blocking point: token buffers are absorbed after
+        # every dispatch is in flight (an admission burst of several
+        # chunks pipelines; the steady mixed state is a single dispatch)
+        self.metrics["host_syncs"] += 1
+        now = time.perf_counter()
+        for d, out in done:
+            out_np = np.asarray(out)         # one bulk transfer per buffer
+            for slot in d.decode_slots:
+                self._absorb(self.scheduler.running[slot],
+                             [int(out_np[slot])], now, outs)
+            if d.sample_chunk:
+                self._absorb(d.chunk.seq, [int(out_np[self.max_slots])],
+                             now, outs)
+
     # ------------------------------------------------------------ drive
     def step(self) -> List[RequestOutput]:
         """One engine iteration under the token budget: the scheduler
@@ -407,30 +493,44 @@ class ServingEngine:
         if self._t0 is None:
             self._t0 = time.perf_counter()
         outs: List[RequestOutput] = []
-        for req in self.scheduler.finish_at_capacity():
-            self._emit(req, outs)    # free slots/blocks before admission
-        if not self.chunked:
-            admitted = self.scheduler.try_admit()
-            if admitted:
-                self._run_prefill_oracle(admitted, outs)
+        d0 = self.runner.dispatches
+        try:
             for req in self.scheduler.finish_at_capacity():
-                self._emit(req, outs)    # a fresh exactly-cap prefill may
-            if not self.scheduler.running:  # already be at the boundary
+                self._emit(req, outs)  # free slots/blocks before admission
+            if not self.chunked:
+                admitted = self.scheduler.try_admit()
+                if admitted:
+                    self._run_prefill_oracle(admitted, outs)
+                for req in self.scheduler.finish_at_capacity():
+                    self._emit(req, outs)  # a fresh exactly-cap prefill
+                if not self.scheduler.running:  # may be at the boundary
+                    return outs
+                plan = self._prepare_dispatch(
+                    self.max_horizon if self.use_fused else 1)
+                self._dispatch_decode(plan, outs)
                 return outs
-            plan = self._prepare_dispatch(
-                self.max_horizon if self.use_fused else 1)
-            self._dispatch_decode(plan, outs)
+            plan = self.scheduler.plan_step(
+                self.max_num_batched_tokens,
+                max_horizon=self.max_horizon if self.use_fused else 1)
+            if self.unified and plan.prefill and plan.horizon <= 1:
+                self._dispatch_unified(plan, outs)
+            else:
+                # pure-decode plans keep the fused megastep (already one
+                # dispatch per multi-token horizon); with
+                # enable_unified_step=False this two-phase execute is the
+                # unified path's parity oracle
+                self._dispatch_decode(plan, outs)
+                if plan.prefill:
+                    self._run_prefill_chunks(plan.prefill, outs)
+            if plan.used:
+                self.metrics["plan_steps"] += 1
+                self.metrics["budget_tokens_used"] += plan.used
             return outs
-        plan = self.scheduler.plan_step(
-            self.max_num_batched_tokens,
-            max_horizon=self.max_horizon if self.use_fused else 1)
-        self._dispatch_decode(plan, outs)
-        if plan.prefill:
-            self._run_prefill_chunks(plan.prefill, outs)
-        if plan.used:
-            self.metrics["plan_steps"] += 1
-            self.metrics["budget_tokens_used"] += plan.used
-        return outs
+        finally:
+            used = self.runner.dispatches - d0
+            if used:
+                self.metrics["device_dispatches"] += used
+                self.metrics["work_steps"] += 1
 
     def stream(self, max_steps: int = 100000) -> Iterator[RequestOutput]:
         """Yield ``RequestOutput`` deltas as horizons complete — callers
@@ -447,6 +547,14 @@ class ServingEngine:
             self.step()
             steps += 1
         return self.report()
+
+    def reset_dispatch_window(self) -> None:
+        """Zero the device-dispatch counters so ``report()``'s
+        ``device_dispatches_per_step`` covers only what follows — e.g.
+        the steady mixed-workload window after warm-up (compile steps
+        and one-off CoW copies land in the warm-up bucket)."""
+        self.metrics["device_dispatches"] = 0
+        self.metrics["work_steps"] = 0
 
     def reset_itl_window(self) -> None:
         """Drop accumulated inter-token-latency samples so ``report()``'s
@@ -492,6 +600,12 @@ class ServingEngine:
             "itl_p99_ms": itl_p99 * 1e3,
             "prefill_chunks": self.metrics["prefill_chunks"],
             "prefill_compiles": self.runner.prefill_compiles(),
+            # device calls per engine iteration (1.0 in the unified
+            # steady mixed state; ~2-3 on the two-call path)
+            "device_dispatches_per_step":
+                (self.metrics["device_dispatches"]
+                 / self.metrics["work_steps"])
+                if self.metrics["work_steps"] else float("nan"),
             "budget_utilization": budget_util,
             "throughput_req_s": n / wall,
             "throughput_tok_s": total_toks / wall,

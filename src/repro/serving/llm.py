@@ -82,13 +82,17 @@ class LLM:
         engine_kw:  forwarded to ``ServingEngine`` (max_slots,
                     num_blocks, max_blocks_per_seq,
                     max_num_batched_tokens, enable_chunked_prefill,
+                    enable_unified_step,
                     prefill_bucket [oracle path only], rt, use_fused,
                     max_horizon, detokenizer via __init__).
                     ``max_num_batched_tokens`` caps the tokens one
                     engine step may batch (decodes first, then prefill
                     chunks); ``enable_chunked_prefill=False`` restores
                     the stop-the-world whole-prompt prefill (the parity
-                    oracle).
+                    oracle); ``enable_unified_step=False`` restores the
+                    two-call mixed step (separate decode / chunk /
+                    sample dispatches) instead of the default fused
+                    single-dispatch iteration.
         """
         if quant not in QUANT_MODES:
             raise ValueError(f"unknown quant mode {quant!r}; "

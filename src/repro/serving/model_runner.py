@@ -35,7 +35,8 @@ class ModelRunner:
                  num_blocks: int, max_blocks_per_seq: int,
                  rt: Optional[dict] = None, max_horizon: int = 8,
                  state_dtype=jnp.float32, kv_cache_dtype: str = "bf16",
-                 chunk_tokens: Optional[int] = None):
+                 chunk_tokens: Optional[int] = None,
+                 unified: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -45,6 +46,12 @@ class ModelRunner:
         self.max_horizon = max(1, max_horizon)
         self.kv_cache_dtype = normalize_kv_cache_dtype(kv_cache_dtype)
         self.chunk_tokens = chunk_tokens
+        self.unified = bool(unified and chunk_tokens)
+        # device dispatches issued so far (jitted calls + CoW copies) —
+        # the engine diffs this around each step for
+        # ``device_dispatches_per_step`` (host->device table uploads are
+        # transfers, not dispatches, and are not counted)
+        self.dispatches = 0
         self.state = T.make_decode_state(cfg, max_slots, num_blocks, self.mb,
                                          dtype=state_dtype,
                                          kv_cache_dtype=self.kv_cache_dtype)
@@ -70,6 +77,16 @@ class ModelRunner:
                 cfg, p, s, t, sp, a, n,
                 max_horizon=self.max_horizon, ctx=None, rt=self.rt),
             donate_argnums=(1,))
+        # the unified step: ONE donated dispatch = one decode step for the
+        # active slots + one prefill chunk + per-row sampling.  Shapes are
+        # pinned to [max_slots] decode rows and the [1, chunk_tokens]
+        # chunk window, so it compiles exactly once.
+        self._unified = None
+        if self.unified:
+            self._unified = jax.jit(
+                lambda p, s, t, sp, a, c, cbt, off, tl: T.unified_step(
+                    cfg, p, s, t, sp, a, c, cbt, off, tl, None, self.rt),
+                donate_argnums=(1,))
         # legacy-loop sampling: the SAME per-slot kernel the megastep runs,
         # jitted standalone so both paths are bitwise identical.
         self._sample = jax.jit(sample_from_logits)
@@ -114,6 +131,7 @@ class ModelRunner:
                 sub[k] = per_seq[k]
         sub["seq_lens"] = jnp.asarray(lens)
         batch = {"tokens": jnp.asarray(toks), "ctx_lens": jnp.asarray(lens)}
+        self.dispatches += 1
         logits, sub = self._prefill(self.params, sub, batch)
         for k in _POOL_KEYS:
             if k in sub:
@@ -136,29 +154,71 @@ class ModelRunner:
         bt = np.zeros((1, self.mb), np.int32)
         bt[0, :len(seq.block_ids)] = seq.block_ids
         cache = cache_from_state(self.state)
+        self.dispatches += 1
         logits, cache = self._prefill_chunk(
             self.params, cache, jnp.asarray(toks), jnp.asarray(bt),
             jnp.int32(start), jnp.int32(start + length))
         self.state.update(cache_to_state(cache))
         return logits
 
-    def prefill_compiles(self) -> float:
-        """Compile count of the active prefill executable: 1 forever for
-        the fixed-shape chunk path; one per distinct (wave size, bucket)
-        shape for the whole-prompt oracle (the recompile explosion the
-        chunked path removes).  Counted via the jit wrapper's
-        ``_cache_size`` (private jax API): if a jax bump removes it,
-        NaN is returned so gates skip with an API-drift notice instead
-        of reading as a fake recompile regression."""
-        fn = self._prefill_chunk if self._prefill_chunk is not None \
-            else self._prefill
+    def unified_step(self, tokens: np.ndarray,
+                     sampling: Dict[str, np.ndarray], active: np.ndarray,
+                     chunk_prompt: Seq[int], block_ids: Seq[int],
+                     start: int, length: int) -> jnp.ndarray:
+        """ONE donated device dispatch for a whole mixed engine iteration:
+        a single decode step over the active slots, one prefill chunk of
+        one sequence, and the per-row sampling for both.  Returns the
+        ``[max_slots + 1]`` token buffer as a *device* array — the engine
+        reads it back after the whole step's dispatches are in flight, so
+        an admission burst of several chunks pipelines behind one sync.
+        Rows [0, max_slots) are the decode slots' samples; row max_slots
+        is the chunk's first token (meaningful only on final chunks)."""
+        W = self.chunk_tokens
+        toks = np.zeros((1, W), np.int32)
+        toks[0, :length] = chunk_prompt[start:start + length]
+        bt = np.zeros((1, self.mb), np.int32)
+        bt[0, :len(block_ids)] = block_ids
+        sp = {k: jnp.asarray(v) for k, v in sampling.items()}
+        self.dispatches += 1
+        out, self.state = self._unified(
+            self.params, self.state, jnp.asarray(tokens), sp,
+            jnp.asarray(active), jnp.asarray(toks), jnp.asarray(bt),
+            jnp.int32(start), jnp.int32(start + length))
+        return out
+
+    @staticmethod
+    def _cache_size(fn) -> float:
+        """Jit compile count via the wrapper's ``_cache_size`` (private
+        jax API): NaN if a jax bump removed it, so gates skip with an
+        API-drift notice instead of reading as a fake regression."""
         if not hasattr(fn, "_cache_size"):     # pragma: no cover - jax API
             return float("nan")
         return float(fn._cache_size())
 
+    def prefill_compiles(self) -> float:
+        """Compile count of the executable that actually runs prefill
+        work: the unified step (which embeds the chunk path) in unified
+        mode, else the fixed-shape chunk executable — 1 forever for
+        either fixed-shape path; one per distinct (wave size, bucket)
+        shape for the whole-prompt oracle (the recompile explosion the
+        chunked path removes)."""
+        if self.unified and self._unified is not None:
+            return self._cache_size(self._unified)
+        fn = self._prefill_chunk if self._prefill_chunk is not None \
+            else self._prefill
+        return self._cache_size(fn)
+
+    def unified_compiles(self) -> float:
+        """Compile count of the unified step executable (NaN when unified
+        dispatch is off or the private jax cache API drifted)."""
+        if self._unified is None:
+            return float("nan")
+        return self._cache_size(self._unified)
+
     # ------------------------------------------------------------ decode
     def decode(self, tokens: np.ndarray) -> jnp.ndarray:
         """One per-token decode step for all slots; tokens: [max_slots]."""
+        self.dispatches += 1
         logits, self.state = self._decode(self.params, self.state,
                                           jnp.asarray(tokens))
         return logits
@@ -168,6 +228,7 @@ class ModelRunner:
         """Dispatch one fused horizon; returns the [n_steps, max_slots]
         token buffer as numpy (the ONE host sync of the dispatch)."""
         sp = {k: jnp.asarray(v) for k, v in sampling.items()}
+        self.dispatches += 1
         out, self.state = self._megastep(
             self.params, self.state, jnp.asarray(tokens), sp,
             jnp.asarray(active), jnp.int32(n_steps))
@@ -175,6 +236,7 @@ class ModelRunner:
 
     def sample(self, logits, sampling: Dict[str, np.ndarray]) -> np.ndarray:
         """Per-slot sampling for the legacy loop / prefill first token."""
+        self.dispatches += 1
         return np.asarray(self._sample(
             logits, jnp.asarray(sampling["keys"]),
             jnp.asarray(sampling["counts"]), jnp.asarray(sampling["temps"]),
@@ -192,6 +254,7 @@ class ModelRunner:
         pad = (pairs[0][0],) * (self.max_slots - len(pairs))
         src = np.asarray([p[0] for p in pairs] + list(pad), np.int32)
         dst = np.asarray([p[1] for p in pairs] + list(pad), np.int32)
+        self.dispatches += 1
         # int8 mode: the scale rows ride along with the value blocks —
         # a fork that dropped them would dequantize its prefix with junk
         for k in _POOL_KEYS:

@@ -67,6 +67,7 @@ class Sequence:
     seq_len: int                   # tokens in cache (incl. last fed)
     last_token: int
     computed_len: int = 0          # prompt tokens already in the KV pool
+    hashed_blocks: int = 0         # full blocks already content-addressed
 
     @property
     def prefilling(self) -> bool:
@@ -83,6 +84,21 @@ class PrefillChunk:
     @property
     def last(self) -> bool:
         return self.start + self.length >= len(self.seq.req.prompt)
+
+
+@dataclass
+class UnifiedDispatch:
+    """One device dispatch of a unified-mode engine iteration.
+
+    ``decode_slots`` are the rows whose decode sample the host absorbs
+    (the unified executable always computes all ``max_slots`` rows; only
+    these are live).  ``chunk`` is the dispatch's single prefill chunk.
+    ``sample_chunk`` marks the chunk row (row ``max_slots`` of the
+    output buffer) as carrying the prompt's first sampled token.
+    """
+    decode_slots: List[int]
+    chunk: PrefillChunk
+    sample_chunk: bool
 
 
 @dataclass
@@ -103,6 +119,26 @@ class StepPlan:
     def used(self) -> int:
         return (len(self.decode_slots) * self.horizon
                 + sum(c.length for c in self.prefill))
+
+    def unified_dispatches(self) -> List[UnifiedDispatch]:
+        """The plan's unified-dispatch layout (deviceless, unit-testable).
+
+        The FIRST dispatch fuses the step's decodes with the first
+        prefill chunk (the single-dispatch steady state of a mixed
+        workload: the planner emits at most one chunk per step while
+        decodes are interleaving); any further chunks — bursts of fresh
+        admissions — each get their own chunk-only dispatch, in plan
+        order, with no decode rows.  Empty when the plan has no prefill
+        (a pure-decode plan dispatches the fused megastep instead) or
+        when the horizon exceeds 1 (never the case when prefill is
+        pending — the planner pins it).
+        """
+        if not self.prefill or self.horizon > 1:
+            return []
+        return [UnifiedDispatch(
+            decode_slots=list(self.decode_slots) if i == 0 else [],
+            chunk=c, sample_chunk=c.last)
+            for i, c in enumerate(self.prefill)]
 
 
 class Scheduler:
@@ -178,7 +214,9 @@ class Scheduler:
             slot = self.free_slots.pop()
             seq = Sequence(req=req, slot=slot, block_ids=block_ids,
                            seq_len=len(req.prompt), last_token=req.prompt[-1],
-                           computed_len=len(req.prompt))
+                           computed_len=len(req.prompt),
+                           hashed_blocks=len(req.prompt)
+                           // self.alloc.block_size)
             self.running[slot] = seq
             admitted.append(seq)
         return admitted
@@ -351,8 +389,11 @@ class Scheduler:
             length = self._chunk_fit(s.block_ids, s.computed_len, want)
             if length <= 0:
                 continue
-            s.block_ids, _ = self.alloc.grow(s.block_ids, s.computed_len,
-                                             length)
+            # content-addressed growth: full blocks this chunk will cover
+            # may be shared with an identical live prefix (register-on-
+            # write hashing makes continuation blocks discoverable)
+            s.block_ids, _ = self.alloc.grow_prefill(
+                s.block_ids, s.computed_len, length, s.req.prompt)
             chunks.append(PrefillChunk(seq=s, start=s.computed_len,
                                        length=length))
             rem -= length
@@ -378,7 +419,8 @@ class Scheduler:
             slot = self.free_slots.pop()
             seq = Sequence(req=req, slot=slot, block_ids=block_ids,
                            seq_len=0, last_token=req.prompt[-1],
-                           computed_len=0)
+                           computed_len=0,
+                           hashed_blocks=length // self.alloc.block_size)
             self.running[slot] = seq
             chunks.append(PrefillChunk(seq=seq, start=0, length=length))
             rem -= length
@@ -392,7 +434,25 @@ class Scheduler:
                         prefill=chunks, budget=budget)
 
     def complete_chunk(self, chunk: PrefillChunk) -> None:
-        """Advance host bookkeeping after the device executed a chunk."""
+        """Advance host bookkeeping after the device executed a chunk,
+        and content-address the blocks the chunk just filled (register-
+        on-write): every newly *full* block becomes discoverable for
+        cross-request prefix reuse — ``allocate_prompt`` only hashes the
+        first chunk's blocks, so without this a multi-chunk prompt's
+        later blocks could never be shared."""
         s = chunk.seq
         s.computed_len = chunk.start + chunk.length
         s.seq_len = s.computed_len
+        bs = self.alloc.block_size
+        full = s.computed_len // bs
+        # only blocks this chunk covered WHOLE are registered: a block
+        # straddling the chunk start went through the int8 boundary
+        # dequant-merge-requant, so its pool bytes differ from the fresh
+        # full-block quantize a reusing sequence would rewrite it with —
+        # sharing it would let that rewrite perturb this sequence's KV.
+        # (bf16 merges are exact, but the rule stays uniform.)
+        first = max(s.hashed_blocks, -(-chunk.start // bs))
+        for i in range(first, full):
+            self.alloc.register_full_block(s.block_ids[i],
+                                           s.req.prompt[:(i + 1) * bs])
+        s.hashed_blocks = max(s.hashed_blocks, full)

@@ -74,6 +74,68 @@ def test_paged_attention_alibi_and_window():
     np.testing.assert_allclose(o, r, atol=5e-5)
 
 
+@pytest.mark.parametrize("q_off", [0, 8, 5, 11])   # 0 / block-aligned /
+@pytest.mark.parametrize("alibi,win", [(False, 0), (True, 0),  # unaligned
+                                       (False, 12)])
+@pytest.mark.parametrize("quant", [False, True])
+def test_flash_attention_chunk_dynamic_offset(q_off, alibi, win, quant):
+    """The dynamic-offset chunk kernel (scalar-prefetch q_offset /
+    total_len, paged-pool page walk + raw chunk overlay, in-register int8
+    dequant) matches the bounded-gather XLA oracle across chunk offsets,
+    ALiBi, sliding window, and both pool formats — interpret mode, so the
+    Pallas path is exercised without TPU hardware."""
+    from repro.kernels.flash_attention import flash_attention_chunk
+    rng = np.random.default_rng(3 + q_off)
+    L, NB, BS, KV, D, H, MB, W = 1, 12, 8, 2, 16, 4, 6, 16
+    total = q_off + int(rng.integers(1, W + 1))
+    q = jnp.asarray(rng.normal(size=(1, W, H, D)), jnp.float32)
+    kr = jnp.asarray(rng.normal(size=(1, W, KV, D)), jnp.float32)
+    vr = jnp.asarray(rng.normal(size=(1, W, KV, D)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(NB)[:MB][None], jnp.int32)
+    if quant:
+        kp = jnp.asarray(rng.integers(-127, 128, (L, NB, BS, KV, D)),
+                         jnp.int8)
+        vp = jnp.asarray(rng.integers(-127, 128, (L, NB, BS, KV, D)),
+                         jnp.int8)
+        ks = jnp.asarray(rng.uniform(0.01, 0.1, (L, NB, KV)), jnp.float32)
+        vs = jnp.asarray(rng.uniform(0.01, 0.1, (L, NB, KV)), jnp.float32)
+    else:
+        kp = jnp.asarray(rng.normal(size=(L, NB, BS, KV, D)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(L, NB, BS, KV, D)), jnp.float32)
+        ks = vs = None
+    sl = alibi_slopes(H) if alibi else None
+    o = flash_attention_chunk(
+        q, kp[0], vp[0], bt, jnp.int32(q_off), jnp.int32(total), kr, vr,
+        sl, k_scales=None if ks is None else ks[0],
+        v_scales=None if vs is None else vs[0], sliding_window=win,
+        block_q=8, interpret=True)
+    r = ref.chunk_prefill_attention_ref(
+        q, kp, vp, ks, vs, 0, bt, jnp.int32(q_off), jnp.int32(total),
+        kr, vr, alibi_slopes=sl, sliding_window=win)
+    live = total - q_off            # padded q rows are garbage on both
+    np.testing.assert_allclose(np.asarray(o[:, :live], np.float32),
+                               np.asarray(r[:, :live], np.float32),
+                               atol=5e-5)
+
+
+def test_flash_attention_chunk_one_compile_across_offsets():
+    """q_offset / total_len are traced operands: every chunk shape of a
+    serving run hits one executable (the whole point of the variant)."""
+    from repro.kernels.flash_attention import flash_attention_chunk
+    rng = np.random.default_rng(7)
+    NB, BS, KV, D, H, MB, W = 8, 8, 2, 16, 4, 4, 8
+    q = jnp.asarray(rng.normal(size=(1, W, H, D)), jnp.float32)
+    kr = jnp.asarray(rng.normal(size=(1, W, KV, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(NB, BS, KV, D)), jnp.float32)
+    bt = jnp.arange(MB, dtype=jnp.int32)[None]
+    before = flash_attention_chunk._cache_size()
+    for off in (0, 3, 8, 17):
+        flash_attention_chunk(q, kp, kp, bt, jnp.int32(off),
+                              jnp.int32(off + 5), kr, kr, None,
+                              block_q=8, interpret=True)
+    assert flash_attention_chunk._cache_size() - before == 1
+
+
 @pytest.mark.parametrize("M,K,N,gs", [(16, 64, 32, 32), (8, 128, 48, 128),
                                       (32, 256, 128, 64), (5, 64, 17, 16)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -62,3 +62,69 @@ def test_decode_write_targets_correct_slot():
     kp = write_decode_kv(kp, 1, kn, bt, jnp.array([5]))
     assert float(kp[1, 3, 1].sum()) == 4.0          # block 3, offset 1
     assert float(kp.sum()) == 4.0                   # nothing else written
+
+
+def test_register_full_block_and_grow_prefill_reuse():
+    """Register-on-write: a block content-addressed after allocation is
+    discoverable by both ``allocate_prompt`` and the continuation-chunk
+    ``grow_prefill``; freeing the last reference unregisters it."""
+    a = BlockAllocator(16, 4)
+    p = list(range(12))
+    ids, _ = a.allocate_prompt(p[:5])              # 1 hashed full + tail
+    # the chunk that fills blocks 1 and 2 registers them afterwards
+    ids, reused = a.grow_prefill(ids, 5, 7, p)
+    assert reused == 0 and len(ids) == 3
+    a.register_full_block(ids[1], p[:8])
+    a.register_full_block(ids[2], p[:12])
+    # re-registering / hash collisions are no-ops
+    a.register_full_block(ids[1], p[:8])
+    b_ids, r = a.allocate_prompt(p)                # whole prompt: 3 shared
+    assert r == 3 and b_ids == ids[:3]
+    # continuation growth also finds them
+    c_ids, _ = a.allocate_prompt(p[:4])
+    c_ids, r = a.grow_prefill(c_ids, 4, 8, p)
+    assert r == 2 and c_ids == ids[:3]
+    # a partially-covered tail block is never shared
+    d_ids, _ = a.allocate_prompt(p[:4])
+    d_ids, r = a.grow_prefill(d_ids, 4, 6, p)      # covers block 1, half 2
+    assert r == 1 and d_ids[1] == ids[1] and d_ids[2] != ids[2]
+    a.free_sequence(b_ids)
+    a.free_sequence(c_ids)
+    a.free_sequence(d_ids)
+    a.free_sequence(ids)                           # last ref: hashes popped
+    e_ids, r = a.allocate_prompt(p)
+    assert r == 0
+
+
+def test_gather_kv_bounded_matches_full_gather_on_live_prefix():
+    """The bounded gather returns the full gather's bytes on every live
+    position and zeros past the walked pages (bf16 and int8 pools)."""
+    from repro.core.kv_quant import (KVCache, kv_gather, kv_gather_bounded,
+                                     make_kv_pool_quant)
+    rng = np.random.default_rng(0)
+    L, NB, BS, KV, D, MB = 2, 10, 4, 2, 8, 5
+    bt = jnp.asarray(rng.permutation(NB)[:MB][None], jnp.int32)
+    kp, vp = make_kv_pool(L, NB, BS, KV, D, jnp.float32)
+    kp = jnp.asarray(rng.normal(size=kp.shape), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=vp.shape), jnp.float32)
+    cache = KVCache(kp, vp)
+    total = 9                                      # 3 live pages of 5
+    live = -(-total // BS)
+    for li in range(L):
+        kb, vb = kv_gather_bounded(cache, li, bt, MB * BS, live,
+                                   jnp.float32)
+        kf, vf = kv_gather(cache, li, bt, MB * BS, jnp.float32)
+        np.testing.assert_array_equal(np.asarray(kb[:, :live * BS]),
+                                      np.asarray(kf[:, :live * BS]))
+        assert not np.any(np.asarray(kb[:, live * BS:]))
+        np.testing.assert_array_equal(np.asarray(vb[:, :live * BS]),
+                                      np.asarray(vf[:, :live * BS]))
+    kq, vq, ks, vs = make_kv_pool_quant(L, NB, BS, KV, D)
+    kq = jnp.asarray(rng.integers(-127, 128, kq.shape), jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.01, 0.1, ks.shape), jnp.float32)
+    qcache = KVCache(kq, kq, ks, ks)
+    kb, _ = kv_gather_bounded(qcache, 1, bt, MB * BS, live, jnp.float32)
+    kf, _ = kv_gather(qcache, 1, bt, MB * BS, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(kb[:, :live * BS]),
+                                  np.asarray(kf[:, :live * BS]))
+    assert not np.any(np.asarray(kb[:, live * BS:]))

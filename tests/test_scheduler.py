@@ -457,3 +457,86 @@ def test_plan_step_zero_headroom_keeps_full_horizon():
         alloc.free(b)
     plan = s.plan_step(32, max_horizon=4)               # headroom is back
     assert plan.horizon == 1 and plan.prefill
+
+
+# ------------------------------------------------- unified-dispatch layout
+
+def test_unified_dispatch_layout():
+    """The plan's unified-dispatch layout: the first dispatch carries
+    every decode slot plus the first chunk, admission-burst chunks each
+    dispatch alone, and only final chunks mark their sample row."""
+    s = _sched(num_blocks=64, max_slots=3, mb=8)
+    s.add(_req(0, 4, max_tokens=100))
+    _execute_plan(s, s.plan_step(32, max_horizon=4))   # rid 0 decoding
+    s.add(_req(1, 21, max_tokens=5))                   # needs 2+ chunks
+    s.add(_req(2, 6, max_tokens=5))                    # fits one chunk
+    plan = s.plan_step(32, max_horizon=4)
+    ds = plan.unified_dispatches()
+    assert [d.chunk for d in ds] == plan.prefill       # one each, in order
+    assert ds[0].decode_slots == plan.decode_slots
+    assert all(d.decode_slots == [] for d in ds[1:])
+    assert [d.sample_chunk for d in ds] == [c.last for c in plan.prefill]
+    # pure-decode plans have no unified dispatch (megastep territory)
+    _execute_plan(s, plan)
+    while any(q.prefilling for q in s.running.values()):
+        _execute_plan(s, s.plan_step(32, max_horizon=4))
+    plan = s.plan_step(32, max_horizon=4)
+    assert not plan.prefill and plan.unified_dispatches() == []
+
+
+# ---------------------------------------------- register-on-write hashing
+
+def test_register_on_write_full_blocks_reused_across_requests():
+    """A repeated 2-chunk prompt reuses ALL its full blocks: the first
+    chunk's via ``allocate_prompt`` hashing, the continuation chunk's via
+    register-on-write + content-addressed ``grow_prefill``."""
+    s = _sched(num_blocks=64, max_slots=2, mb=8)
+    prompt = list(range(1, 23))                        # 22 tokens, BS=4
+    r0 = _req(0, 1, max_tokens=4)
+    r0.prompt = list(prompt)
+    r0.prompt_len0 = len(prompt)
+    s.add(r0)
+    # two chunks: 12 + 10 (budget 12) — 5 full blocks + private tail
+    for _ in range(4):
+        _execute_plan(s, s.plan_step(12, max_horizon=1))
+        if not any(q.prefilling for q in s.running.values()):
+            break
+    q0 = next(q for q in s.running.values() if q.req.rid == 0)
+    assert not q0.prefilling
+    assert q0.hashed_blocks == len(prompt) // BS       # all 5 registered
+    r1 = _req(1, 1, max_tokens=4)
+    r1.prompt = list(prompt)
+    r1.prompt_len0 = len(prompt)
+    s.add(r1)
+    before = s.alloc.stats["reused"]
+    # budget 13 = 1 decode (rid 0) + 12 prefill: rid 1's chunk walk lands
+    # on the same block-aligned 12 + 10 split rid 0 took
+    while any(q.prefilling for q in s.running.values()) or \
+            any(r.rid == 1 for r in s.waiting):
+        _execute_plan(s, s.plan_step(13, max_horizon=1))
+    q1 = next(q for q in s.running.values() if q.req.rid == 1)
+    # every full block is shared with rid 0's live sequence
+    n_full = len(prompt) // BS
+    assert s.alloc.stats["reused"] - before == n_full
+    assert q1.block_ids[:n_full] == q0.block_ids[:n_full]
+    assert q1.block_ids[n_full] != q0.block_ids[n_full]   # tails private
+
+
+def test_register_on_write_skips_chunk_straddling_blocks():
+    """A block filled across two chunks (the int8 boundary-merge case)
+    is never registered — only whole-chunk-covered blocks are shareable."""
+    s = _sched(num_blocks=64, max_slots=1, mb=8)
+    r = _req(0, 1, max_tokens=4)
+    r.prompt = list(range(1, 25))                      # 24 tokens
+    r.prompt_len0 = 24
+    s.add(r)
+    # chunks of 6: blocks 1 (tokens 4..8) and 4 (16..20) straddle
+    while any(q.prefilling for q in s.running.values()) or s.waiting:
+        _execute_plan(s, s.plan_step(7, max_horizon=1))   # 1 dec + 6 pre
+    q = next(iter(s.running.values()))
+    hashed = [s.alloc._blocks[b].token_hash is not None
+              for b in q.block_ids[:6]]
+    # block 0 hashed by allocate_prompt (first chunk covers it whole);
+    # straddled blocks stay private, fully-covered later ones register
+    assert hashed[0] and not all(hashed[1:])
+    assert any(hashed[1:])                             # some registered
