@@ -5,13 +5,14 @@ Requests are added *while* the stream is being consumed (Poisson-ish
 arrivals), each with its own ``SamplingParams`` — greedy, temperature and
 top-p requests share every batch. Ends with the paper's metric report.
 
-    PYTHONPATH=src python examples/serve_batched.py [--requests 24]
+    PYTHONPATH=src python examples/serve_batched.py [--requests 24] \
+        [--max-waiting 8 --shed-policy shed-oldest] [--deadline-ms 5000]
 """
 import argparse
 
 import numpy as np
 
-from repro.serving import LLM, SamplingParams
+from repro.serving import EngineOverloadedError, LLM, SamplingParams
 
 
 def main():
@@ -20,11 +21,21 @@ def main():
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--blocks", type=int, default=96,
                     help="small pool => exercises preemption")
+    ap.add_argument("--max-waiting", type=int, default=None,
+                    help="bound the waiting queue (load shedding)")
+    ap.add_argument("--shed-policy", choices=("reject", "shed-oldest"),
+                    default="reject",
+                    help="what to do when the waiting queue is full")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request end-to-end deadline (finish_reason"
+                         "='deadline' on expiry)")
     args = ap.parse_args()
 
     llm = LLM.load(args.arch, reduced=True, overrides=dict(num_layers=4),
                    max_slots=6, num_blocks=args.blocks,
-                   max_blocks_per_seq=12, prefill_bucket=32)
+                   max_blocks_per_seq=12, prefill_bucket=32,
+                   max_waiting=args.max_waiting,
+                   shed_policy=args.shed_policy)
     eng = llm.engine
 
     rng = np.random.default_rng(0)
@@ -35,15 +46,25 @@ def main():
         sp = SamplingParams(
             temperature=0.7 if i % 3 == 0 else 0.0,
             top_p=0.9 if i % 3 == 0 else 1.0,
-            max_tokens=int(rng.integers(4, 16)))
+            max_tokens=int(rng.integers(4, 16)),
+            deadline_ms=args.deadline_ms)
         return prompt, sp
+
+    rejected = 0
+
+    def submit(req):
+        nonlocal rejected
+        try:
+            eng.add(*req)
+        except EngineOverloadedError:
+            rejected += 1     # --shed-policy reject with a full queue
 
     # seed the engine with a couple of requests, then keep adding while
     # consuming the stream — continuous intake, no drain barrier.
     pending = [make_request(i) for i in range(args.requests)]
     for _ in range(2):
         if pending:
-            eng.add(*pending.pop(0))
+            submit(pending.pop(0))
 
     events = finished = 0
     first_tokens_seen = 0
@@ -55,14 +76,15 @@ def main():
             finished += 1
         # Poisson-ish arrivals: ~1 new request per streamed event
         if pending:
-            eng.add(*pending.pop(0))
+            submit(pending.pop(0))
         if events % 20 == 0:
             print(f"event {events}: running={len(eng.running)} "
                   f"waiting={len(eng.waiting)} done={finished} "
                   f"pool_util={eng.alloc.utilization():.2f}")
 
     print(f"\n{events} streamed events, {finished} finished "
-          f"({first_tokens_seen} first-token events before any drain)")
+          f"({first_tokens_seen} first-token events before any drain, "
+          f"{rejected} rejected at intake)")
     rep = eng.report()
     print("final report:")
     for k, v in rep.items():

@@ -109,11 +109,21 @@ class BlockAllocator:
         return hashlib.blake2b(np.asarray(tokens, np.int32).tobytes(),
                                digest_size=16).digest()
 
-    def allocate_prompt(self, tokens: Sequence[int]) -> Tuple[List[int], int]:
+    def allocate_prompt(self, tokens: Sequence[int],
+                        register: bool = True) -> Tuple[List[int], int]:
         """Allocate blocks for a prompt. Returns (block_ids, num_reused_blocks).
 
         Full blocks are content-addressed and may be shared; the trailing
         partial block is always private.
+
+        ``register=False`` still *looks up* (and shares) existing hashed
+        blocks but does not content-address fresh ones — for callers that
+        cannot guarantee the hashed content will ever land in the pool.
+        The serving scheduler registers eagerly: a reusing prompt always
+        rewrites the shared block bit-identically rather than trusting
+        its contents, and ``free`` drops a block's hash entry the moment
+        its refcount hits 0, so aborted or failed dispatches cannot leave
+        stale prefix-cache entries behind.
         """
         n = len(tokens)
         n_full = n // self.block_size
@@ -128,8 +138,9 @@ class BlockAllocator:
                 reused += 1
                 continue
             b = self._alloc_raw()
-            self._blocks[b].token_hash = h
-            self._hash_to_block[h] = b
+            if register:
+                self._blocks[b].token_hash = h
+                self._hash_to_block[h] = b
             ids.append(b)
         if n % self.block_size or n == 0:
             ids.append(self._alloc_raw())
@@ -161,6 +172,30 @@ class BlockAllocator:
             return
         blk.token_hash = h
         self._hash_to_block[h] = block_id
+
+    def ref(self, block_id: int) -> int:
+        """Current refcount of a block (0 == free)."""
+        return self._blocks[block_id].ref
+
+    def audit(self) -> Dict[str, int]:
+        """Leak/consistency snapshot for tests and ``engine.health()``.
+
+        live_blocks + num_free must equal num_blocks; every hash entry
+        must map to a live block that owns that hash (a dangling entry
+        would serve stale prefix-cache hits).  Raises AssertionError on
+        inconsistency instead of returning a lie.
+        """
+        live = sum(1 for b in self._blocks if b.ref > 0)
+        assert live + self.num_free == self.num_blocks, \
+            f"block accounting broken: {live} live + {self.num_free} " \
+            f"free != {self.num_blocks}"
+        for h, bid in self._hash_to_block.items():
+            blk = self._blocks[bid]
+            assert blk.ref > 0, f"hash entry -> freed block {bid}"
+            assert blk.token_hash == h, \
+                f"hash entry -> block {bid} owning a different hash"
+        return {"live_blocks": live, "free_blocks": self.num_free,
+                "hash_entries": len(self._hash_to_block)}
 
     def grow_prefill(self, block_ids: List[int], start_pos: int,
                      num_tokens: int, tokens: Sequence[int]

@@ -8,6 +8,15 @@
 prefix reuse off — the paper's comparison point (Fig. 2). ``--stream``
 prints each ``RequestOutput`` delta as horizons complete instead of
 waiting for the batch to drain.
+
+Robustness knobs (see docs/API.md "Fault tolerance"): ``--max-waiting N``
+bounds the intake queue with ``--shed-policy {reject,shed-oldest}``
+deciding what happens when it is full (``reject`` raises
+``EngineOverloadedError`` at submit — with this driver's submit-all-
+upfront pattern that aborts the run, which is the point of the policy;
+``shed-oldest`` finishes the oldest waiting request with
+``finish_reason='shed'``), and ``--deadline-ms`` attaches an end-to-end
+deadline to every request (``finish_reason='deadline'`` on expiry).
 """
 from __future__ import annotations
 
@@ -59,6 +68,19 @@ def main() -> None:
                          "mixed step (separate decode / prefill-chunk / "
                          "sample dispatches) — the unified single-"
                          "dispatch step's parity oracle")
+    ap.add_argument("--max-waiting", type=int, default=None,
+                    help="bound the waiting queue; arrivals past the "
+                         "bound are handled per --shed-policy")
+    ap.add_argument("--shed-policy", default="reject",
+                    choices=["reject", "shed-oldest"],
+                    help="full-queue policy: 'reject' refuses the new "
+                         "request (EngineOverloadedError), 'shed-oldest' "
+                         "finishes the oldest waiting request with "
+                         "finish_reason='shed' to make room")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request end-to-end deadline from arrival; "
+                         "expired requests finish with "
+                         "finish_reason='deadline'")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -86,6 +108,8 @@ def main() -> None:
                    max_num_batched_tokens=args.max_num_batched_tokens,
                    enable_chunked_prefill=args.enable_chunked_prefill,
                    enable_unified_step=args.enable_unified_step,
+                   max_waiting=args.max_waiting,
+                   shed_policy=args.shed_policy,
                    prefill_bucket=32)
 
     rng = np.random.default_rng(args.seed)
@@ -94,7 +118,8 @@ def main() -> None:
                for _ in range(args.requests)]
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, stop=list(args.stop),
-                        max_tokens=args.max_tokens)
+                        max_tokens=args.max_tokens,
+                        deadline_ms=args.deadline_ms)
 
     if args.stream:
         for out in llm.stream(prompts, sp):

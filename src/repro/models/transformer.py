@@ -412,18 +412,26 @@ def decode_megastep(cfg: ModelConfig, params: Params,
     B = tokens.shape[0]
     out = jnp.zeros((max_horizon, B), jnp.int32)
     active_i = active.astype(jnp.int32)
+    # static sampling-guard flag (rt is a host dict closed over at trace
+    # time): guarded rows sample -1 on non-finite logits — see
+    # ``core.sampling.sample_from_logits``
+    guard = bool(rt.get("sampling_guard"))
 
     def body(t, carry):
         state, toks, out = carry
         logits, state = decode_step(cfg, params, state, toks, ctx, rt)
         nxt = sample_from_logits(logits, sampling["keys"],
                                  sampling["counts"] + t, sampling["temps"],
-                                 sampling["top_ks"], sampling["top_ps"])
+                                 sampling["top_ks"], sampling["top_ps"],
+                                 poison=sampling.get("poison"), guard=guard)
         nxt = jnp.where(active, nxt, toks)
         state = dict(state)
         state["seq_lens"] = state["seq_lens"] + active_i
         out = out.at[t].set(jnp.where(active, nxt, 0))
-        return (state, nxt, out)
+        # a guarded -1 must not feed back into the next step's embedding
+        # lookup (the row is dead; the host quarantines it on readback)
+        safe = jnp.maximum(nxt, 0) if guard else nxt
+        return (state, safe, out)
 
     state, _, out = jax.lax.fori_loop(
         0, n_steps, body, (state, tokens, out))
@@ -789,7 +797,9 @@ def unified_step(cfg: ModelConfig, params: Params,
     logits = jnp.concatenate([logits_dec, logits_chunk], axis=0)
     nxt = sample_from_logits(logits, sampling["keys"], sampling["counts"],
                              sampling["temps"], sampling["top_ks"],
-                             sampling["top_ps"])
+                             sampling["top_ps"],
+                             poison=sampling.get("poison"),
+                             guard=bool((rt or {}).get("sampling_guard")))
     return nxt, state
 
 

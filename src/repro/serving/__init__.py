@@ -8,7 +8,11 @@ Deprecated (one-release shim)::
 
     from repro.serving import ServingEngine, Request
 """
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import (EngineOverloadedError, Request,
+                                  ServingEngine)
+from repro.serving.faults import (FaultInjector, FaultSpec,
+                                  PoisonedDispatchError,
+                                  TransientDeviceError, random_schedule)
 from repro.serving.llm import LLM
 from repro.serving.params import RequestOutput, SamplingParams
 from repro.serving.scheduler import (PrefillChunk, RequestState, Scheduler,
@@ -16,4 +20,7 @@ from repro.serving.scheduler import (PrefillChunk, RequestState, Scheduler,
 
 __all__ = ["LLM", "SamplingParams", "RequestOutput", "ServingEngine",
            "Request", "RequestState", "Scheduler", "Sequence",
-           "StepPlan", "PrefillChunk"]
+           "StepPlan", "PrefillChunk",
+           "EngineOverloadedError", "FaultInjector", "FaultSpec",
+           "PoisonedDispatchError", "TransientDeviceError",
+           "random_schedule"]

@@ -68,11 +68,20 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.paged_cache import BlockAllocator
 from repro.models import transformer as T
+from repro.runtime.fault import StragglerDetector
+from repro.serving.faults import (FaultInjector, PoisonedDispatchError,
+                                  TransientDeviceError)
 from repro.serving.model_runner import ModelRunner
-from repro.serving.params import (FINISH_LENGTH, FINISH_STOP, RequestOutput,
+from repro.serving.params import (FINISH_ABORT, FINISH_ERROR, FINISH_LENGTH,
+                                  FINISH_SHED, FINISH_STOP, RequestOutput,
                                   SamplingParams)
 from repro.serving.scheduler import (PrefillChunk, RequestState, Scheduler,
                                      Sequence, StepPlan)
+
+
+class EngineOverloadedError(RuntimeError):
+    """``add`` refused a request: the waiting queue is at ``max_waiting``
+    and the engine's shed policy is "reject"."""
 
 
 @dataclass
@@ -101,7 +110,16 @@ class ServingEngine:
                  kv_cache_dtype: str = "bf16",
                  max_num_batched_tokens: int = 256,
                  enable_chunked_prefill: bool = True,
-                 enable_unified_step: bool = True):
+                 enable_unified_step: bool = True,
+                 max_waiting: Optional[int] = None,
+                 shed_policy: str = "reject",
+                 enable_guards: bool = True,
+                 fault_injector: Optional[FaultInjector] = None,
+                 max_dispatch_retries: int = 2,
+                 retry_backoff_s: float = 0.0):
+        if shed_policy not in ("reject", "shed-oldest"):
+            raise ValueError(f"shed_policy {shed_policy!r}: expected "
+                             "'reject' or 'shed-oldest'")
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -121,7 +139,10 @@ class ServingEngine:
             "prefill_chunks": 0, "plan_steps": 0, "budget_tokens_used": 0,
             # device calls per engine iteration (the unified-dispatch
             # figure): work_steps counts iterations that dispatched at all
-            "device_dispatches": 0, "work_steps": 0}
+            "device_dispatches": 0, "work_steps": 0,
+            # robustness counters (see docs/API.md "Fault tolerance")
+            "dispatch_retries": 0, "quarantined": 0, "shed": 0,
+            "aborted": 0, "deadline_expired": 0, "slow_steps": 0}
         # sliding-window-only archs use a fixed ring cache: no block growth
         ring_only = bool(cfg.sliding_window) and not any(
             cfg.layer_kind(i) == "full" for i in range(cfg.num_layers))
@@ -154,6 +175,15 @@ class ServingEngine:
         # ``enable_unified_step=False`` as the parity oracle.
         self.unified = bool(enable_unified_step) and self.chunked \
             and use_fused
+        # the per-step non-finite logit guard is a *static* flag baked
+        # into the jitted executables at trace time: guards-off builds
+        # trace byte-identical programs to a build that never heard of
+        # guards (zero overhead when disabled), guards-on adds one
+        # isfinite-reduce + select per sampled row
+        self.guards = bool(enable_guards)
+        rt = dict(rt or {})
+        if self.guards:
+            rt["sampling_guard"] = True
         self.runner = ModelRunner(cfg, params, max_slots=max_slots,
                                   num_blocks=num_blocks,
                                   max_blocks_per_seq=max_blocks_per_seq,
@@ -167,6 +197,22 @@ class ServingEngine:
         # bounded window: a long-lived streaming engine must not grow a
         # sample per token forever; 64k recent gaps is plenty for p99
         self._itl_samples: deque = deque(maxlen=65536)
+        # ---- robustness state (tentpole: see docs/API.md) ----
+        self.max_waiting = None if max_waiting is None else int(max_waiting)
+        self.shed_policy = shed_policy
+        self.faults = fault_injector
+        self.max_dispatch_retries = int(max_dispatch_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        # serving watchdog: EMA step-time monitor over work steps (the
+        # training stack's detector, reused verbatim)
+        self._straggler = StragglerDetector()
+        # poisoned-dispatch bisection: rid groups awaiting probation, and
+        # the group currently admitted in isolation (allowed_rids)
+        self._suspects: deque = deque()
+        self._probing: Optional[List[int]] = None
+        # events produced outside step() (abort / shed): drained first
+        # by the next step so stream()/run_until_done surface them
+        self._pending: List[RequestOutput] = []
 
     # ---------------------------------------------------- facade views
     @property
@@ -207,7 +253,22 @@ class ServingEngine:
             sampling_params: Optional[SamplingParams] = None,
             request_id: Optional[int] = None) -> int:
         """Queue a request (allowed while running / streaming). Returns
-        the request id used in its ``RequestOutput`` events."""
+        the request id used in its ``RequestOutput`` events.
+
+        With ``max_waiting`` set the waiting queue is bounded: a full
+        queue either raises ``EngineOverloadedError`` (shed_policy
+        "reject" — the caller backs off) or finishes the OLDEST waiting
+        request with finish_reason "shed" to make room ("shed-oldest" —
+        staleness-bounded queues; running requests are never shed)."""
+        if self.max_waiting is not None \
+                and len(self.scheduler.waiting) >= self.max_waiting:
+            self.metrics["shed"] += 1
+            if self.shed_policy == "reject":
+                raise EngineOverloadedError(
+                    f"waiting queue at max_waiting={self.max_waiting}")
+            victim = self.scheduler.waiting[0]
+            self.scheduler.abort(victim.rid, FINISH_SHED)
+            self._emit(victim, self._pending)
         sp = sampling_params or SamplingParams()
         rid = self._next_rid if request_id is None else request_id
         self._next_rid = max(self._next_rid, rid) + 1
@@ -231,6 +292,21 @@ class ServingEngine:
         self._next_rid = max(self._next_rid, req.rid + 1)
         self.scheduler.add(rec)
         req.arrival = rec.arrival
+
+    # ------------------------------------------------------------ lifecycle
+    def abort(self, request_id: int) -> bool:
+        """Cancel a request wherever it is — waiting, mid-prefill-chunk,
+        or decoding.  Its KV blocks, hash registrations and slot are
+        released the same call (refcount-audited: ``alloc.audit()``
+        stays clean).  The finish event (finish_reason "aborted",
+        partial output kept) surfaces with the next ``step()``.  Returns
+        False if the id is unknown or already finished."""
+        req = self.scheduler.abort(request_id, FINISH_ABORT)
+        if req is None:
+            return False
+        self.metrics["aborted"] += 1
+        self._emit(req, self._pending)
+        return True
 
     # ------------------------------------------------------------ outputs
     def _emit(self, req: RequestState, outs: List[RequestOutput]) -> None:
@@ -268,6 +344,17 @@ class ServingEngine:
                 self._itl_samples.append(now - req.last_event_t)
             req.last_event_t = now
         for tok in toks:
+            if int(tok) < 0:
+                # the on-device non-finite guard sampled -1: this ROW's
+                # logits went NaN/inf.  Quarantine just this request —
+                # everything sampled before the -1 is kept, everything
+                # after it (fused horizons feed a clamped placeholder
+                # forward) is garbage and discarded with the sequence.
+                self.metrics["quarantined"] += 1
+                if self.faults is not None:
+                    self.faults.forgive(req.rid)
+                self.scheduler.finish(s, FINISH_ERROR)
+                break
             req.output.append(int(tok))
             s.last_token = int(tok)
             s.seq_len += 1
@@ -282,9 +369,79 @@ class ServingEngine:
                 break
         self._emit(req, outs)
 
+    # ------------------------------------------------------------ recovery
+    def _protected(self, rids: List[int], fn):
+        """Run one device-dispatch thunk under the transient-fault guard:
+        consult the injector BEFORE issuing the dispatch (donated buffers
+        are never left half-dead, so a retry is always safe), retry with
+        bounded exponential backoff, then escalate to
+        ``PoisonedDispatchError`` carrying the batch's request ids for
+        the bisection path.  One ``is None`` check when no injector is
+        attached."""
+        attempt = 0
+        while True:
+            try:
+                if self.faults is not None:
+                    self.faults.check_dispatch(rids)
+                return fn()
+            except TransientDeviceError as e:
+                attempt += 1
+                self.metrics["dispatch_retries"] += 1
+                if attempt > self.max_dispatch_retries:
+                    raise PoisonedDispatchError(rids, str(e)) from e
+                if self.retry_backoff_s:
+                    time.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
+
+    def _quarantine(self, rid: int, outs: List[RequestOutput]) -> None:
+        self.metrics["quarantined"] += 1
+        if self.faults is not None:
+            self.faults.forgive(rid)
+        req = self.scheduler.abort(rid, FINISH_ERROR)
+        if req is not None:
+            self._emit(req, outs)
+
+    def _advance_probe(self) -> None:
+        """Move the bisection forward: pop the next suspect group into
+        probation (the scheduler admits ONLY its rids until it clears),
+        or lift the allow-set entirely once no suspects remain."""
+        if self._probing is None and self._suspects:
+            self._probing = list(self._suspects.popleft())
+            self.scheduler.allowed_rids = set(self._probing)
+        elif self._probing is None:
+            self.scheduler.allowed_rids = None
+
+    def _recover(self, e: PoisonedDispatchError,
+                 outs: List[RequestOutput]) -> None:
+        """Poisoned-dispatch recovery.  Every request in the failing
+        batch is requeued recompute-style (the same fold-and-replay that
+        preemption uses, so survivors stay token-exact); a single-request
+        batch has found its offender and is quarantined with
+        finish_reason "error"; a larger batch is bisected into two
+        probation groups the scheduler will re-admit in isolation —
+        log2(batch) failing dispatches later the offender is cornered
+        while every innocent request has cleared and kept decoding."""
+        live = [rid for rid in e.rids
+                if self.scheduler.preempt_request(rid) is not None]
+        if len(live) == 1:
+            self._quarantine(live[0], outs)
+        elif len(live) > 1:
+            mid = len(live) // 2
+            self._suspects.append(live[:mid])
+            self._suspects.append(live[mid:])
+        self._probing = None
+        self._advance_probe()
+
     # ------------------------------------------------------------ prefill
-    def _sampling_rows(self, recs: List[RequestState]) -> Dict[str, np.ndarray]:
-        """Stack per-request SamplingParams into padded device-ready rows."""
+    def _sampling_rows(self, recs: List[RequestState],
+                       live: Optional[set] = None) -> Dict[str, np.ndarray]:
+        """Stack per-request SamplingParams into padded device-ready rows.
+
+        ``live`` — rids whose sampled token this dispatch actually
+        consumes (decode rows absorb every row they compute, but a mixed
+        dispatch also computes throwaway samples for mid-prefill slots
+        and non-final chunk rows).  The nan fault site is consulted only
+        for live rows, so a scheduled fault cannot burn itself on a
+        sample nobody reads.  None = every non-pad row is live."""
         B = len(recs)
         arr = {"keys": np.zeros((B, 2), np.uint32),
                "counts": np.zeros((B,), np.int32),
@@ -299,13 +456,30 @@ class ServingEngine:
             arr["temps"][i] = r.sampling.temperature
             arr["top_ks"][i] = r.sampling.top_k
             arr["top_ps"][i] = r.sampling.top_p
+        # nan-site fault injection: a NaN bias row added to the chosen
+        # requests' logits ON DEVICE, so the non-finite guard is
+        # exercised end to end.  The "poison" key is present only when a
+        # spec fires (its presence is static per trace, so fault-free
+        # serving never traces a poisoned executable).
+        eligible = [r.rid for r in recs if r is not None
+                    and (live is None or r.rid in live)]
+        nan = self.faults.nan_rids(eligible) \
+            if self.faults is not None else ()
+        if nan:
+            rows = [i for i, r in enumerate(recs)
+                    if r is not None and r.rid in nan]
+            if rows:
+                p = np.zeros((B,), np.float32)
+                p[rows] = np.nan
+                arr["poison"] = p
         return arr
 
-    def _slot_sampling(self) -> Dict[str, np.ndarray]:
+    def _slot_sampling(self, live: Optional[set] = None
+                       ) -> Dict[str, np.ndarray]:
         recs: List[Optional[RequestState]] = [None] * self.max_slots
         for slot, s in self.scheduler.running.items():
             recs[slot] = s.req
-        return self._sampling_rows(recs)
+        return self._sampling_rows(recs, live=live)
 
     def _run_prefill_oracle(self, seqs: List[Sequence],
                             outs: List[RequestOutput]) -> None:
@@ -318,11 +492,17 @@ class ServingEngine:
         b = self.prefill_bucket
         maxlen = max(s.seq_len for s in seqs)
         maxlen = min(((maxlen + b - 1) // b) * b, self.scheduler.cap_tokens)
-        logits = self.runner.prefill(seqs, maxlen)
+        rids = [s.req.rid for s in seqs]
+        logits = self._protected(rids,
+                                 lambda: self.runner.prefill(seqs, maxlen))
+        # register-on-write: the wave's device write is now confirmed, so
+        # its full prompt blocks become content-addressable
+        for s in seqs:
+            self.scheduler.register_written(s)
         self.metrics["prompt_tokens"] += sum(s.seq_len for s in seqs)
         # first sampled token, per-request sampling streams
-        nxt = self.runner.sample(logits, self._sampling_rows(
-            [s.req for s in seqs]))
+        nxt = self._protected(rids, lambda: self.runner.sample(
+            logits, self._sampling_rows([s.req for s in seqs])))
         self.metrics["host_syncs"] += 1
         now = time.perf_counter()
         for i, s in enumerate(seqs):
@@ -339,13 +519,24 @@ class ServingEngine:
         have their first token sampled in ONE batched call (a single
         host sync for any number of finishing prompts)."""
         final: List[tuple] = []
-        for c in chunks:
-            logits = self.runner.prefill_chunk(c.seq, c.start, c.length)
-            self.scheduler.complete_chunk(c)
-            self.metrics["prefill_chunks"] += 1
-            self.metrics["prompt_tokens"] += c.length
-            if c.last:
-                final.append((c.seq, logits))
+        try:
+            for c in chunks:
+                logits = self._protected(
+                    [c.seq.req.rid],
+                    lambda c=c: self.runner.prefill_chunk(c.seq, c.start,
+                                                          c.length))
+                self.scheduler.complete_chunk(c)
+                self.metrics["prefill_chunks"] += 1
+                self.metrics["prompt_tokens"] += c.length
+                if c.last:
+                    final.append((c.seq, logits))
+        except PoisonedDispatchError as e:
+            # prompts that completed prefill this step but whose
+            # first-token sample never ran cannot decode token-exactly:
+            # requeue them alongside the failing dispatch (recompute
+            # replays them; as innocents they clear probation fast)
+            raise PoisonedDispatchError(
+                set(e.rids) | {s.req.rid for s, _ in final}) from e
         if not final:
             return
         # pad to max_slots rows so this sample executable compiles once
@@ -356,8 +547,10 @@ class ServingEngine:
             [lg for _, lg in final]
             + ([jnp.zeros((pad,) + final[0][1].shape[1:],
                           final[0][1].dtype)] if pad else []), axis=0)
-        nxt = self.runner.sample(stacked, self._sampling_rows(
-            [s.req for s, _ in final] + [None] * pad))
+        nxt = self._protected(
+            [s.req.rid for s, _ in final],
+            lambda: self.runner.sample(stacked, self._sampling_rows(
+                [s.req for s, _ in final] + [None] * pad)))
         self.metrics["host_syncs"] += 1
         now = time.perf_counter()
         for i, (s, _) in enumerate(final):
@@ -404,16 +597,22 @@ class ServingEngine:
         toks = np.zeros((self.max_slots,), np.int32)
         for slot in plan.decode_slots:
             toks[slot] = self.scheduler.running[slot].last_token
+        rids = [self.scheduler.running[sl].req.rid
+                for sl in plan.decode_slots]
         if self.use_fused:
             active = np.zeros((self.max_slots,), bool)
             active[plan.decode_slots] = True
-            out_np = self.runner.megastep(toks, self._slot_sampling(),
-                                          active, plan.horizon)
+            out_np = self._protected(rids, lambda: self.runner.megastep(
+                toks, self._slot_sampling(live=set(rids)), active,
+                plan.horizon))
             nxt_rows = {slot: out_np[:, slot].tolist()
                         for slot in plan.decode_slots}
         else:
-            logits = self.runner.decode(toks)
-            nxt = self.runner.sample(logits, self._slot_sampling())
+            def _decode_and_sample():
+                logits = self.runner.decode(toks)
+                return self.runner.sample(
+                    logits, self._slot_sampling(live=set(rids)))
+            nxt = self._protected(rids, _decode_and_sample)
             nxt_rows = {slot: [int(nxt[slot])] for slot in plan.decode_slots}
         self.metrics["host_syncs"] += 1
         self.metrics["decode_dispatches"] += 1
@@ -438,48 +637,63 @@ class ServingEngine:
         if plan.cow_pairs:
             self.runner.copy_cow(plan.cow_pairs)
         done: List[tuple] = []
-        for d in plan.unified_dispatches():
-            # device tables carry EXACTLY this dispatch's decode slots:
-            # everything else gets seq_len 0, so the decode KV scatter
-            # drops its writes (chunk-only dispatches decode nothing)
-            self.runner.sync_tables({slot: self.scheduler.running[slot]
-                                     for slot in d.decode_slots})
-            toks = np.zeros((self.max_slots,), np.int32)
-            active = np.zeros((self.max_slots,), bool)
-            recs: List[Optional[RequestState]] = [None] * self.max_slots
-            for slot in d.decode_slots:
-                toks[slot] = self.scheduler.running[slot].last_token
-                active[slot] = True
-                recs[slot] = self.scheduler.running[slot].req
-            c = d.chunk
-            recs.append(c.seq.req)          # row max_slots: the chunk
-            out = self.runner.unified_step(
-                toks, self._sampling_rows(recs), active,
-                c.seq.req.prompt, c.seq.block_ids, c.start, c.length)
-            done.append((d, out))
-            self.scheduler.complete_chunk(c)
-            self.metrics["prefill_chunks"] += 1
-            self.metrics["prompt_tokens"] += c.length
-            if d.decode_slots:
-                # decode bookkeeping rides the unified dispatch; its
-                # *timing* is not recorded — decode_step_latency_us stays
-                # a pure-decode figure (mixed dispatches include chunk
-                # compute the two-call path never timed as decode)
-                self.metrics["decode_dispatches"] += 1
-                self.metrics["decode_steps"] += 1
-        # the step's ONE blocking point: token buffers are absorbed after
-        # every dispatch is in flight (an admission burst of several
-        # chunks pipelines; the steady mixed state is a single dispatch)
-        self.metrics["host_syncs"] += 1
-        now = time.perf_counter()
-        for d, out in done:
-            out_np = np.asarray(out)         # one bulk transfer per buffer
-            for slot in d.decode_slots:
-                self._absorb(self.scheduler.running[slot],
-                             [int(out_np[slot])], now, outs)
-            if d.sample_chunk:
-                self._absorb(d.chunk.seq, [int(out_np[self.max_slots])],
-                             now, outs)
+        try:
+            for d in plan.unified_dispatches():
+                # device tables carry EXACTLY this dispatch's decode slots:
+                # everything else gets seq_len 0, so the decode KV scatter
+                # drops its writes (chunk-only dispatches decode nothing)
+                self.runner.sync_tables({slot: self.scheduler.running[slot]
+                                         for slot in d.decode_slots})
+                toks = np.zeros((self.max_slots,), np.int32)
+                active = np.zeros((self.max_slots,), bool)
+                recs: List[Optional[RequestState]] = [None] * self.max_slots
+                rids = []
+                for slot in d.decode_slots:
+                    toks[slot] = self.scheduler.running[slot].last_token
+                    active[slot] = True
+                    recs[slot] = self.scheduler.running[slot].req
+                    rids.append(recs[slot].rid)
+                c = d.chunk
+                recs.append(c.seq.req)          # row max_slots: the chunk
+                live = set(rids) | ({c.seq.req.rid} if d.sample_chunk
+                                    else set())
+                out = self._protected(
+                    rids + [c.seq.req.rid],
+                    lambda: self.runner.unified_step(
+                        toks, self._sampling_rows(recs, live=live), active,
+                        c.seq.req.prompt, c.seq.block_ids, c.start,
+                        c.length))
+                done.append((d, out))
+                self.scheduler.complete_chunk(c)
+                self.metrics["prefill_chunks"] += 1
+                self.metrics["prompt_tokens"] += c.length
+                if d.decode_slots:
+                    # decode bookkeeping rides the unified dispatch; its
+                    # *timing* is not recorded — decode_step_latency_us
+                    # stays a pure-decode figure (mixed dispatches include
+                    # chunk compute the two-call path never timed as
+                    # decode)
+                    self.metrics["decode_dispatches"] += 1
+                    self.metrics["decode_steps"] += 1
+        finally:
+            # the step's ONE blocking point: token buffers are absorbed
+            # after every dispatch is in flight (an admission burst of
+            # several chunks pipelines; the steady mixed state is a
+            # single dispatch).  On a poisoned later dispatch this still
+            # runs before recovery, so completed dispatches' tokens are
+            # banked and survive the fold-and-requeue token-exactly.
+            if done:
+                self.metrics["host_syncs"] += 1
+                now = time.perf_counter()
+                for d, out in done:
+                    out_np = np.asarray(out)  # one bulk transfer per buffer
+                    for slot in d.decode_slots:
+                        self._absorb(self.scheduler.running[slot],
+                                     [int(out_np[slot])], now, outs)
+                    if d.sample_chunk:
+                        self._absorb(d.chunk.seq,
+                                     [int(out_np[self.max_slots])],
+                                     now, outs)
 
     # ------------------------------------------------------------ drive
     def step(self) -> List[RequestOutput]:
@@ -489,16 +703,37 @@ class ServingEngine:
         the remaining budget; the runner executes both halves.  With
         ``enable_chunked_prefill=False`` the pre-budget stop-the-world
         behaviour is preserved as the parity oracle.  Returns the
-        ``RequestOutput`` deltas produced by this iteration."""
+        ``RequestOutput`` deltas produced by this iteration.
+
+        Robustness rides the same loop: deadlines expire before
+        planning, fault-injection sites are consulted at their natural
+        points (dispatch wrappers, sampling rows, admission headroom,
+        the step wall-clock), a poisoned dispatch lands in the recovery
+        path instead of crashing the engine, and the straggler watchdog
+        observes every work step's wall time."""
         if self._t0 is None:
             self._t0 = time.perf_counter()
-        outs: List[RequestOutput] = []
+        outs: List[RequestOutput] = self._pending  # abort/shed events first
+        self._pending = []
+        alloc_blocked = False
+        if self.faults is not None:
+            self.faults.step_begin()
+            alloc_blocked = self.faults.alloc_blocked()
+        for req in self.scheduler.expire_deadlines():
+            self.metrics["deadline_expired"] += 1
+            self._emit(req, outs)
+        self._advance_probe()
         d0 = self.runner.dispatches
+        t_work = time.perf_counter()
+        if self.faults is not None:
+            stall = self.faults.stall_seconds()
+            if stall:           # inside the timed window: the watchdog
+                time.sleep(stall)  # must see the stall, like a real one
         try:
             for req in self.scheduler.finish_at_capacity():
                 self._emit(req, outs)  # free slots/blocks before admission
             if not self.chunked:
-                admitted = self.scheduler.try_admit()
+                admitted = self.scheduler.try_admit(alloc_blocked)
                 if admitted:
                     self._run_prefill_oracle(admitted, outs)
                 for req in self.scheduler.finish_at_capacity():
@@ -511,7 +746,8 @@ class ServingEngine:
                 return outs
             plan = self.scheduler.plan_step(
                 self.max_num_batched_tokens,
-                max_horizon=self.max_horizon if self.use_fused else 1)
+                max_horizon=self.max_horizon if self.use_fused else 1,
+                alloc_blocked=alloc_blocked)
             if self.unified and plan.prefill and plan.horizon <= 1:
                 self._dispatch_unified(plan, outs)
             else:
@@ -526,11 +762,33 @@ class ServingEngine:
                 self.metrics["plan_steps"] += 1
                 self.metrics["budget_tokens_used"] += plan.used
             return outs
+        except PoisonedDispatchError as e:
+            self._recover(e, outs)
+            return outs
         finally:
             used = self.runner.dispatches - d0
             if used:
                 self.metrics["device_dispatches"] += used
                 self.metrics["work_steps"] += 1
+                # the first work step is the jit-compile step: feeding it
+                # to the watchdog would seed the EMA ~100x too high and
+                # mask every real stall for dozens of steps (the same
+                # warm-vs-cold split the decode timers make)
+                if self.metrics["work_steps"] > 1:
+                    verdict = self._straggler.observe(
+                        int(self.metrics["work_steps"]),
+                        time.perf_counter() - t_work)
+                    if verdict != "ok":
+                        self.metrics["slow_steps"] += 1
+            # probation clears once every probed rid has made it out of
+            # the waiting queue through a CLEAN dispatch (a rid-targeted
+            # fault would have failed that dispatch): move to the next
+            # suspect group, or lift the allow-set
+            if self._probing is not None:
+                probe = set(self._probing)
+                if not any(r.rid in probe for r in self.scheduler.waiting):
+                    self._probing = None
+                    self._advance_probe()
 
     def stream(self, max_steps: int = 100000) -> Iterator[RequestOutput]:
         """Yield ``RequestOutput`` deltas as horizons complete — callers
@@ -563,6 +821,33 @@ class ServingEngine:
         last-event timestamps: a stall in progress still lands in the
         first post-reset sample."""
         self._itl_samples.clear()
+
+    def health(self) -> Dict[str, float]:
+        """O(1) liveness snapshot for load balancers / operators: queue
+        depth, pool pressure, and the robustness counters.  Never
+        dispatches, never blocks — safe to poll every step."""
+        m = self.metrics
+        ema = self._straggler.ema
+        return {
+            "waiting": float(len(self.scheduler.waiting)),
+            "running": float(len(self.scheduler.running)),
+            "max_waiting": float(self.max_waiting)
+            if self.max_waiting is not None else float("inf"),
+            "free_blocks": float(self.alloc.num_free),
+            "watermark_blocks": float(self.alloc.watermark),
+            "block_utilization": self.alloc.utilization(),
+            "step_time_ema_ms": ema * 1e3 if ema is not None
+            else float("nan"),
+            "slow_steps": float(m["slow_steps"]),
+            "dispatch_retries": float(m["dispatch_retries"]),
+            "quarantined": float(m["quarantined"]),
+            "shed": float(m["shed"]),
+            "aborted": float(m["aborted"]),
+            "deadline_expired": float(m["deadline_expired"]),
+            # rids still under poisoned-dispatch probation (0 = healthy)
+            "probing_rids": float(len(self._probing or [])
+                                  + sum(len(g) for g in self._suspects)),
+        }
 
     def report(self) -> Dict[str, float]:
         """The paper's three numbers (+ fast-path and streaming counters)."""
@@ -611,6 +896,15 @@ class ServingEngine:
             "throughput_tok_s": total_toks / wall,
             "generate_tok_s": self.metrics["gen_tokens"] / wall,
             "preemptions": self.metrics["preemptions"],
+            # robustness (satellite: StragglerDetector wired in + the
+            # tentpole's recovery/shedding counters)
+            "step_time_ema_ms": (self._straggler.ema or float("nan")) * 1e3,
+            "slow_steps": self.metrics["slow_steps"],
+            "dispatch_retries": self.metrics["dispatch_retries"],
+            "quarantined": self.metrics["quarantined"],
+            "shed": self.metrics["shed"],
+            "aborted": self.metrics["aborted"],
+            "deadline_expired": self.metrics["deadline_expired"],
             "block_utilization": self.alloc.utilization(),
             "blocks_reused": self.alloc.stats["reused"],
             # pool memory: the figure kv_cache_dtype="int8" halves vs bf16

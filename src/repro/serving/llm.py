@@ -84,7 +84,11 @@ class LLM:
                     max_num_batched_tokens, enable_chunked_prefill,
                     enable_unified_step,
                     prefill_bucket [oracle path only], rt, use_fused,
-                    max_horizon, detokenizer via __init__).
+                    max_horizon, detokenizer via __init__; robustness:
+                    max_waiting, shed_policy, enable_guards,
+                    fault_injector, max_dispatch_retries,
+                    retry_backoff_s — see docs/API.md "Fault
+                    tolerance").
                     ``max_num_batched_tokens`` caps the tokens one
                     engine step may batch (decodes first, then prefill
                     chunks); ``enable_chunked_prefill=False`` restores
@@ -170,6 +174,12 @@ class LLM:
             raise RuntimeError(f"requests {missing} did not finish "
                                f"(engine stalled?)")
         return [final[r] for r in rids]
+
+    def abort(self, request_id: int) -> bool:
+        """Cancel a request by id (see ``ServingEngine.abort``): KV
+        blocks and prefix-hash registrations are released immediately;
+        the "aborted" finish event surfaces with the next engine step."""
+        return self.engine.abort(request_id)
 
     def stream(self, prompts: Union[Prompt, Sequence[Prompt]],
                sampling_params: Union[SamplingParams,

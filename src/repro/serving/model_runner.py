@@ -88,8 +88,11 @@ class ModelRunner:
                     cfg, p, s, t, sp, a, c, cbt, off, tl, None, self.rt),
                 donate_argnums=(1,))
         # legacy-loop sampling: the SAME per-slot kernel the megastep runs,
-        # jitted standalone so both paths are bitwise identical.
-        self._sample = jax.jit(sample_from_logits)
+        # jitted standalone so both paths are bitwise identical.  ``guard``
+        # is trace-static (a python bool branching on jnp.isfinite): with
+        # guards off the traced program is identical to the pre-guard one.
+        self._sample = jax.jit(sample_from_logits,
+                               static_argnames=("guard",))
 
     # ------------------------------------------------------------ tables
     def sync_tables(self, running: Dict[int, "object"]) -> None:
@@ -235,12 +238,19 @@ class ModelRunner:
         return np.asarray(out[:n_steps])
 
     def sample(self, logits, sampling: Dict[str, np.ndarray]) -> np.ndarray:
-        """Per-slot sampling for the legacy loop / prefill first token."""
+        """Per-slot sampling for the legacy loop / prefill first token.
+        An optional "poison" row-bias (fault injection) and the
+        non-finite guard flag ride through so the two-call oracle path
+        gets the exact same protection as the fused executables."""
         self.dispatches += 1
+        kw = {}
+        if "poison" in sampling:
+            kw["poison"] = jnp.asarray(sampling["poison"])
         return np.asarray(self._sample(
             logits, jnp.asarray(sampling["keys"]),
             jnp.asarray(sampling["counts"]), jnp.asarray(sampling["temps"]),
-            jnp.asarray(sampling["top_ks"]), jnp.asarray(sampling["top_ps"])))
+            jnp.asarray(sampling["top_ks"]), jnp.asarray(sampling["top_ps"]),
+            guard=bool(self.rt.get("sampling_guard")), **kw))
 
     # ------------------------------------------------------------ CoW
     def copy_cow(self, pairs: Seq[Tuple[int, int]]) -> None:

@@ -15,6 +15,10 @@ from typing import List, Optional
 FINISH_STOP = "stop"          # hit a stop token id
 FINISH_LENGTH = "length"      # generated max_tokens
 FINISH_CAPACITY = "capacity"  # force-finished at block-table capacity
+FINISH_ABORT = "aborted"      # caller cancelled via engine.abort()
+FINISH_DEADLINE = "deadline"  # per-request deadline expired
+FINISH_ERROR = "error"        # quarantined: poisoned dispatch / NaN row
+FINISH_SHED = "shed"          # load-shed from a full waiting queue
 
 
 @dataclass(frozen=True)
@@ -31,6 +35,14 @@ class SamplingParams:
     stop:        token ids that end the generation; the matched token is
                  included in the output and finish_reason is "stop".
     max_tokens:  generation budget; finish_reason "length" when reached.
+    ttft_deadline_ms: wall-clock budget (from arrival) for the FIRST
+                 token; a request still token-less past it finishes with
+                 finish_reason "deadline" (None disables).
+    deadline_ms: total wall-clock budget (from arrival) for the whole
+                 request; enforced by the scheduler every step, whether
+                 the request is waiting, mid-prefill, or decoding —
+                 finish_reason "deadline", partial output kept (None
+                 disables).
     """
     temperature: float = 0.0
     top_k: int = 0
@@ -38,6 +50,8 @@ class SamplingParams:
     seed: Optional[int] = None
     stop: List[int] = field(default_factory=list)
     max_tokens: int = 32
+    ttft_deadline_ms: Optional[float] = None
+    deadline_ms: Optional[float] = None
 
     def __post_init__(self):
         if self.temperature < 0:
@@ -48,6 +62,10 @@ class SamplingParams:
             raise ValueError("top_k must be >= 0")
         if self.max_tokens < 1:
             raise ValueError("max_tokens must be >= 1")
+        for name in ("ttft_deadline_ms", "deadline_ms"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be > 0 (or None)")
 
 
 @dataclass
@@ -58,7 +76,8 @@ class RequestOutput:
     request; ``token_ids`` is the cumulative generation so far.  ``text``
     / ``new_text`` are filled only when the engine was given a
     detokenizer.  ``finish_reason`` is None while the request is running,
-    else one of "stop" | "length" | "capacity".
+    else one of "stop" | "length" | "capacity" | "aborted" | "deadline"
+    | "error" | "shed".
     """
     request_id: int
     prompt_token_ids: List[int]

@@ -12,12 +12,13 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set
 
 import numpy as np
 
 from repro.core.paged_cache import BlockAllocator
-from repro.serving.params import FINISH_CAPACITY, SamplingParams
+from repro.serving.params import (FINISH_CAPACITY, FINISH_DEADLINE,
+                                  SamplingParams)
 
 
 @dataclass
@@ -172,6 +173,11 @@ class Scheduler:
         self.free_slots = list(range(max_slots - 1, -1, -1))
         # hard per-sequence KV capacity: the block table is mb entries wide
         self.cap_tokens = self.mb * self.alloc.block_size
+        # admission allow-set: None admits everyone (the normal state);
+        # a set restricts admission to those rids — the engine's
+        # poisoned-dispatch bisection probes suspects in isolation while
+        # cleared requests keep flowing
+        self.allowed_rids: Optional[Set[int]] = None
 
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
@@ -197,19 +203,43 @@ class Scheduler:
             req.prompt_len0 = min(req.prompt_len0, self.cap_tokens)
             self.metrics["truncated_prompts"] += 1
 
-    def try_admit(self) -> List[Sequence]:
+    def _admissible_index(self) -> Optional[int]:
+        """Index of the first waiting request the allow-set admits (FIFO
+        among admissible; held-back requests are skipped, not overtaken
+        — with no allow-set this is simply the queue head)."""
+        if self.allowed_rids is None:
+            return 0 if self.waiting else None
+        for i, req in enumerate(self.waiting):
+            if req.rid in self.allowed_rids:
+                return i
+        return None
+
+    def try_admit(self, alloc_blocked: bool = False) -> List[Sequence]:
         """Whole-prompt admission (the stop-the-world parity oracle):
         admit FIFO while slots and (watermarked) blocks allow; returns
-        the newly admitted sequences — the caller must prefill them."""
+        the newly admitted sequences — the caller must prefill them.
+        ``alloc_blocked`` simulates allocator exhaustion (fault
+        injection): no admission this step.
+
+        Blocks are content-addressed eagerly so requests admitted in the
+        same wave share their common prefix.  Safe under faults: a
+        reusing prompt always *rewrites* the shared block bit-identically
+        rather than trusting its contents, and every failure path this
+        engine has (abort, deadline, shed, poisoned-dispatch requeue)
+        frees the blocks, which drops their hash entries at refcount 0 —
+        no stale prefix-cache entry survives a failed wave."""
         admitted: List[Sequence] = []
-        while self.waiting and self.free_slots:
-            req = self.waiting[0]
+        while self.free_slots and not alloc_blocked:
+            idx = self._admissible_index()
+            if idx is None:
+                break
+            req = self.waiting[idx]
             self._clamp_prompt(req)
             need = (len(req.prompt) + self.alloc.block_size - 1) \
                 // self.alloc.block_size + 1
             if not self.alloc.can_allocate(need):
                 break
-            self.waiting.pop(0)
+            self.waiting.pop(idx)
             block_ids, _reused = self.alloc.allocate_prompt(req.prompt)
             slot = self.free_slots.pop()
             seq = Sequence(req=req, slot=slot, block_ids=block_ids,
@@ -220,6 +250,18 @@ class Scheduler:
             self.running[slot] = seq
             admitted.append(seq)
         return admitted
+
+    def register_written(self, s: Sequence) -> None:
+        """Content-address any full prompt block not yet hashed (no-op
+        after eager admission registration; kept as the engine's
+        post-write invariant hook for the whole-prompt oracle — the
+        chunked path's equivalent is ``complete_chunk``)."""
+        bs = self.alloc.block_size
+        full = min(s.computed_len, len(s.req.prompt)) // bs
+        for i in range(s.hashed_blocks, full):
+            self.alloc.register_full_block(s.block_ids[i],
+                                           s.req.prompt[:(i + 1) * bs])
+        s.hashed_blocks = max(s.hashed_blocks, full)
 
     # ------------------------------------------------------------ capacity
     def writes_left(self, s: Sequence) -> int:
@@ -248,10 +290,62 @@ class Scheduler:
                 done.append(self.finish(s, FINISH_CAPACITY))
         return done
 
+    # ------------------------------------------------------------ deadlines
+    def _deadline_hit(self, req: RequestState, now: float) -> bool:
+        sp = req.sampling
+        elapsed_ms = (now - req.arrival) * 1e3
+        if sp.deadline_ms is not None and elapsed_ms > sp.deadline_ms:
+            return True
+        return (sp.ttft_deadline_ms is not None
+                and req.first_token_t is None
+                and elapsed_ms > sp.ttft_deadline_ms)
+
+    def expire_deadlines(self) -> List[RequestState]:
+        """Finish every request past its deadline (finish_reason
+        "deadline"), wherever it is in the lifecycle: still waiting
+        (just dequeued — it holds nothing), mid-prefill-chunk or decoding
+        (KV blocks and slot released this step).  Partial output is
+        kept."""
+        now = time.perf_counter()
+        done: List[RequestState] = []
+        for req in [r for r in self.waiting if self._deadline_hit(r, now)]:
+            self.waiting.remove(req)
+            req.done_t = now
+            req.finish_reason = FINISH_DEADLINE
+            self.finished.append(req)
+            done.append(req)
+        for slot in list(self.running):
+            s = self.running[slot]
+            if self._deadline_hit(s.req, now):
+                done.append(self.finish(s, FINISH_DEADLINE))
+        return done
+
+    # ------------------------------------------------------------ abort
+    def abort(self, rid: int, reason: str) -> Optional[RequestState]:
+        """Cancel a request by id, wherever it is: waiting (dequeued),
+        mid-prefill-chunk or decoding (blocks + slot freed the same
+        step, including partially-grown chunk blocks — ``block_ids``
+        always reflects every grow).  Returns the finished record, or
+        None if the rid is unknown / already finished."""
+        for req in self.waiting:
+            if req.rid == rid:
+                self.waiting.remove(req)
+                req.done_t = time.perf_counter()
+                req.finish_reason = reason
+                self.finished.append(req)
+                return req
+        for s in self.running.values():
+            if s.req.rid == rid:
+                return self.finish(s, reason)
+        return None
+
     # ------------------------------------------------------------ preemption
-    def preempt_youngest(self) -> RequestState:
-        slot = max(self.running,
-                   key=lambda sl: self.running[sl].req.arrival)
+    def _requeue(self, slot: int) -> RequestState:
+        """Recompute-style requeue of a running sequence: free its KV
+        blocks + slot, fold generated tokens into the prompt, and put it
+        back at the queue head — re-admission replays everything through
+        prefill (token-exact: the sampling stream position survives via
+        ``counts``)."""
         s = self.running.pop(slot)
         self.alloc.free_sequence(s.block_ids)
         self.free_slots.append(slot)
@@ -270,6 +364,20 @@ class Scheduler:
         s.req.folded = len(s.req.output)
         self.waiting.insert(0, s.req)
         return s.req
+
+    def preempt_youngest(self) -> RequestState:
+        slot = max(self.running,
+                   key=lambda sl: self.running[sl].req.arrival)
+        return self._requeue(slot)
+
+    def preempt_request(self, rid: int) -> Optional[RequestState]:
+        """Targeted recompute-style requeue (the poisoned-dispatch
+        recovery path): same machinery as ``preempt_youngest``, aimed at
+        one request.  None if the rid is not currently running."""
+        for slot, s in self.running.items():
+            if s.req.rid == rid:
+                return self._requeue(slot)
+        return None
 
     # ------------------------------------------------------------ horizon
     def decodable(self) -> Dict[int, Sequence]:
@@ -335,24 +443,29 @@ class Scheduler:
         slack = len(block_ids) * bs - start      # room in allocated blocks
         return min(want, max(0, slack) + self.alloc.num_free * bs)
 
-    def _prefill_runnable(self) -> bool:
+    def _prefill_runnable(self, alloc_blocked: bool = False) -> bool:
         """Whether at least one prefill chunk could actually be scheduled
         THIS step — the only case worth pinning the decode horizon to 1
         for.  A mid-prefill sequence must have room for >= 1 token; a
         waiting prompt additionally needs a free slot, a pool it can
         ever fit, and watermarked headroom right now.  Anything else
-        (full slots, zero headroom, forever-infeasible head) cannot
-        progress regardless, so decodes keep the full fused horizon."""
+        (full slots, zero headroom, forever-infeasible head, a blocked
+        allocator) cannot progress regardless, so decodes keep the full
+        fused horizon."""
+        if alloc_blocked:
+            return False
         for s in self.running.values():
             if s.prefilling and \
                     self._chunk_fit(s.block_ids, s.computed_len, 1) > 0:
                 return True
-        return bool(self.waiting and self.free_slots
-                    and self._pool_feasible(self.waiting[0])
+        idx = self._admissible_index()
+        return bool(idx is not None and self.free_slots
+                    and self._pool_feasible(self.waiting[idx])
                     and self.alloc.num_free > self.alloc.watermark)
 
     def plan_step(self, max_num_batched_tokens: int,
-                  max_horizon: int = 1) -> StepPlan:
+                  max_horizon: int = 1,
+                  alloc_blocked: bool = False) -> StepPlan:
         """Fill one token budget: running decodes first (decode-priority,
         so inter-token latency stays bounded), then prefill *chunks* of
         partially-admitted prompts, then fresh admissions into whatever
@@ -364,9 +477,15 @@ class Scheduler:
         While prefill work is pending the decode horizon is pinned to 1
         (one decode token per sequence per iteration interleaved with
         chunks); with no prefill in flight the full fused horizon is
-        planned, recovering the megastep steady state."""
+        planned, recovering the megastep steady state.
+
+        ``alloc_blocked`` (fault injection: the allocator reports
+        exhaustion) suppresses everything that would *take new blocks
+        for new work* — chunk growth, fresh admission, and the
+        deadlock-guard eviction — while already-running decodes keep
+        their pre-budgeted growth and continue unharmed."""
         budget = max_num_batched_tokens
-        h = self.plan_horizon(1 if self._prefill_runnable()
+        h = self.plan_horizon(1 if self._prefill_runnable(alloc_blocked)
                               else min(max_horizon,
                                        max(1, budget
                                            // max(1, len(self.decodable())))))
@@ -379,6 +498,8 @@ class Scheduler:
             # pre-grown blocks stay owned and they decode next step
             dec_slots = dec_slots[:budget // h]
         rem = budget - len(dec_slots) * h
+        if alloc_blocked:
+            rem = 0                      # no chunk growth, no admission
         chunks: List[PrefillChunk] = []
         # continue partially-prefilled prompts first, oldest arrival first
         for s in sorted((s for s in self.running.values() if s.prefilling),
@@ -398,10 +519,14 @@ class Scheduler:
                                        length=length))
             rem -= length
         # fresh admissions: first chunk is watermark-gated like whole-
-        # prompt admission; full blocks are content-addressed so prefix
-        # reuse still applies to whatever the first chunk covers
-        while rem > 0 and self.waiting and self.free_slots:
-            req = self.waiting[0]
+        # prompt admission; full blocks become content-addressed once the
+        # chunk's device write is confirmed (``complete_chunk``), so
+        # prefix reuse still applies to whatever the first chunk covers
+        while rem > 0 and self.free_slots:
+            idx = self._admissible_index()
+            if idx is None:
+                break
+            req = self.waiting[idx]
             self._clamp_prompt(req)
             bs = self.alloc.block_size
             if not self._pool_feasible(req):
@@ -414,7 +539,7 @@ class Scheduler:
             length = min(length, max(0, headroom))
             if length <= 0:
                 break
-            self.waiting.pop(0)
+            self.waiting.pop(idx)
             block_ids, _ = self.alloc.allocate_prompt(req.prompt[:length])
             slot = self.free_slots.pop()
             seq = Sequence(req=req, slot=slot, block_ids=block_ids,
@@ -424,7 +549,8 @@ class Scheduler:
             self.running[slot] = seq
             chunks.append(PrefillChunk(seq=seq, start=0, length=length))
             rem -= length
-        if not dec_slots and not chunks and len(self.running) > 1 \
+        if not dec_slots and not chunks and not alloc_blocked \
+                and len(self.running) > 1 \
                 and any(s.prefilling for s in self.running.values()):
             # every runnable path is blocked on KV blocks held by newer
             # sequences: evict the youngest so the oldest makes progress
