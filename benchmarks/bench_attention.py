@@ -24,7 +24,6 @@ def run() -> None:
         fn = jax.jit(lambda q, k, v: grouped_attention(q, k, v, causal=True))
         us = timeit(fn, q, k, v)
         base_us = base_us or us
-        kv_bytes = 2 * B * S * kv * D * 4
         emit(f"attn_kv{kv}", us,
              f"kv_mem_frac={kv/H:.2f};time_frac={us/base_us:.2f}")
     # paper's example: 8 heads, 2 groups -> KV memory 25% (kv=2), and the

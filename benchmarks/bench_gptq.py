@@ -8,7 +8,6 @@ from benchmarks.common import emit, timeit
 from repro.configs.base import QuantConfig
 from repro.core.gptq import gptq_quantize, quant_error, rtn_quantize
 from repro.core.quant import make_quant_params
-from repro.kernels.ops import quant_matmul
 from repro.kernels.ref import quant_matmul_ref
 
 

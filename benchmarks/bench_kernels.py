@@ -10,7 +10,6 @@ import jax.numpy as jnp
 from benchmarks.common import emit, timeit
 from repro.core.alibi import alibi_slopes
 from repro.kernels import ref
-from repro.kernels.ops import paged_attention
 
 
 def run() -> None:

@@ -6,10 +6,9 @@ activation-similarity clustering, and measure the quality of the grouping.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.registry import get_reduced
-from repro.core.grouping import convert_mha_to_gqa, grouping_quality, head_similarity
+from repro.core.grouping import convert_mha_to_gqa
 from repro.models import transformer as T
 
 

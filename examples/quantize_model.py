@@ -7,7 +7,6 @@ reduced model and reports logit drift.
     PYTHONPATH=src python examples/quantize_model.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import QuantConfig

@@ -1,0 +1,58 @@
+"""repro.analysis — JAX/Pallas-aware static checker for this repo.
+
+The serving stack's performance claims rest on contracts no unit test
+watches continuously: the hot loop must not sync with the device outside
+the one planned token readback per step (R1), donated buffers must never
+be read after the dispatch that consumed them (R2), the fixed-shape
+executables must not grow retrace vectors (R3), every Pallas page walk
+must stay inside the live prefix of the paged pool — the exact class of
+the seed's unbounded-page-walk bug (R4), and Python control flow must
+never branch on traced values inside a jitted body (R5).
+
+``python -m repro.analysis`` runs all rules over ``src/repro`` and diffs
+the findings against ``analysis/baseline.json``; any finding not in the
+baseline exits nonzero, which is the CI merge gate.  Every baseline
+entry carries a mandatory justification — see docs/ANALYSIS.md.
+"""
+from __future__ import annotations
+
+from repro.analysis.findings import (Baseline, Finding,  # noqa: F401
+                                     load_baseline)
+from repro.analysis.project import Project, SourceModule  # noqa: F401
+
+ALL_RULES = ("R1", "R2", "R3", "R4", "R5")
+
+RULE_TITLES = {
+    "R1": "host-sync-in-hot-path",
+    "R2": "donation-safety",
+    "R3": "retrace-hazard",
+    "R4": "kernel-contract",
+    "R5": "traced-control-flow",
+}
+
+
+def analyze_project(project: Project, rules=ALL_RULES):
+    """Run the requested rules over a loaded ``Project``; returns the
+    sorted finding list (inline ``# repro: allow[...]`` sites already
+    dropped)."""
+    from repro.analysis.rules_donation import check_donation
+    from repro.analysis.rules_flow import check_traced_flow
+    from repro.analysis.rules_kernel import check_kernel_contracts
+    from repro.analysis.rules_retrace import check_retrace
+    from repro.analysis.rules_sync import check_host_sync
+
+    runners = {"R1": check_host_sync, "R2": check_donation,
+               "R3": check_retrace, "R4": check_kernel_contracts,
+               "R5": check_traced_flow}
+    findings = []
+    for rule in rules:
+        findings.extend(runners[rule](project))
+    findings = [f for f in findings if not project.is_allowed(f)]
+    return sorted(findings, key=lambda f: (f.path, f.line, f.key))
+
+
+def analyze_source(source: str, filename: str = "<fixture>.py",
+                   rules=ALL_RULES, roots=None):
+    """Analyze a single in-memory module (the test-fixture entry point)."""
+    project = Project.from_sources({filename: source}, roots=roots)
+    return analyze_project(project, rules=rules)

@@ -1,0 +1,124 @@
+"""Cheap flow-insensitive call graph over the project.
+
+Good enough for hot-path reachability (R1/R5): resolves
+
+* bare calls ``fn(...)`` to module-local or ``from m import fn`` defs,
+* ``alias.fn(...)`` through module imports (``from repro.models import
+  transformer as T`` → ``T.prefill``),
+* ``self.method(...)`` within the enclosing class,
+* ``self.attr.method(...)`` via an attribute-type map built from
+  ``self.attr = ClassName(...)`` assignments in ``__init__`` (so
+  ``ServingEngine.step`` reaches ``ModelRunner.sample``), and
+* callables passed as arguments (``self._protected(rids, lambda: ...)``
+  marks the lambda body reachable too).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.project import FunctionInfo, Project, dotted_name
+
+
+def _class_attr_types(project: Project) -> Dict[str, Dict[str, str]]:
+    """class name -> {self attr name -> class name of assigned value}."""
+    known_classes = {name for m in project.modules for name in m.classes}
+    out: Dict[str, Dict[str, str]] = {}
+    for mod in project.modules:
+        for cls_name, cls_node in mod.classes.items():
+            attrs: Dict[str, str] = {}
+            for node in ast.walk(cls_node):
+                if not isinstance(node, ast.Assign):
+                    continue
+                for tgt in node.targets:
+                    if (isinstance(tgt, ast.Attribute)
+                            and isinstance(tgt.value, ast.Name)
+                            and tgt.value.id == "self"
+                            and isinstance(node.value, ast.Call)):
+                        callee = dotted_name(node.value.func)
+                        base = callee.split(".")[-1]
+                        if base in known_classes:
+                            attrs[tgt.attr] = base
+            out[cls_name] = attrs
+    return out
+
+
+class CallGraph:
+    def __init__(self, project: Project):
+        self.project = project
+        self.attr_types = _class_attr_types(project)
+        # FunctionInfo.ref -> set of callee refs
+        self.edges: Dict[str, Set[str]] = {}
+        # class name -> defining module (first wins; names are unique here)
+        self.class_home: Dict[str, str] = {}
+        for m in project.modules:
+            for name in m.classes:
+                self.class_home.setdefault(name, m.rel)
+        for fn in project.all_functions():
+            self.edges[fn.ref] = self._callees(fn)
+
+    # ------------------------------------------------------------------
+    def _method(self, cls: str, name: str) -> Optional[FunctionInfo]:
+        rel = self.class_home.get(cls)
+        if rel is None:
+            return None
+        return self.project.by_rel[rel].functions.get(f"{cls}.{name}")
+
+    def _callees(self, fn: FunctionInfo) -> Set[str]:
+        callees: Set[str] = set()
+        mod = fn.module
+
+        def add(info: Optional[FunctionInfo]):
+            if info is not None:
+                callees.add(info.ref)
+
+        for node in ast.walk(fn.node):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Name):
+                add(self.project.resolve_symbol(mod, f.id))
+            elif isinstance(f, ast.Attribute):
+                base = f.value
+                if isinstance(base, ast.Name) and base.id == "self":
+                    if fn.class_name:
+                        add(self._method(fn.class_name, f.attr))
+                elif (isinstance(base, ast.Attribute)
+                      and isinstance(base.value, ast.Name)
+                      and base.value.id == "self" and fn.class_name):
+                    # self.attr.method(...)
+                    attr_cls = self.attr_types.get(
+                        fn.class_name, {}).get(base.attr)
+                    if attr_cls:
+                        add(self._method(attr_cls, f.attr))
+                else:
+                    add(self.project.resolve_attr_call(mod, base, f.attr))
+            # callables passed as args reach their bodies: resolve
+            # Name args that denote project functions (lambdas are part
+            # of the caller's own AST and are walked in place by rules)
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                if isinstance(arg, ast.Name):
+                    cand = self.project.resolve_symbol(mod, arg.id)
+                    if cand is not None and isinstance(
+                            cand.node,
+                            (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        add(cand)
+        return callees
+
+    # ------------------------------------------------------------------
+    def reachable(self, roots: List[str]) -> Set[str]:
+        """BFS closure of FunctionInfo refs from the given root refs.
+        Method roots pull in sibling private helpers conservatively via
+        the explicit edges only."""
+        seen: Set[str] = set()
+        frontier = [r for r in roots if r in self.edges]
+        seen.update(frontier)
+        while frontier:
+            nxt = []
+            for ref in frontier:
+                for callee in self.edges.get(ref, ()):
+                    if callee not in seen:
+                        seen.add(callee)
+                        nxt.append(callee)
+            frontier = nxt
+        return seen

@@ -1,0 +1,185 @@
+"""Discovery of every jit executable in the project.
+
+Two shapes exist in this repo:
+
+* attribute sites — ``self._megastep = jax.jit(lambda ...: ...,
+  donate_argnums=(1,))`` inside a class body (the ModelRunner
+  executables), and
+* decorated functions — ``@functools.partial(jax.jit,
+  static_argnames=(...), donate_argnums=(...))`` (the kernel wrappers,
+  ``copy_blocks``).
+
+The registry records, per site: the jitted callable's AST (lambda or
+resolved function), donated positional indices, static argument names,
+and where it lives — the shared ground truth for R1 (jit call => device
+value), R2 (donation positions), R3 (static params) and R5 (trace
+roots).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.project import (FunctionInfo, Project, call_name,
+                                    literal_or_none)
+
+
+@dataclass
+class JitSite:
+    name: str                       # display: "ModelRunner._megastep"
+    module_rel: str
+    lineno: int
+    donate: Tuple[int, ...] = ()
+    static_names: Tuple[str, ...] = ()
+    # the callable under jit: a Lambda node, or the FunctionInfo of a
+    # named function (decorated site / jax.jit(fn) by name)
+    fn_lambda: Optional[ast.Lambda] = None
+    fn_info: Optional[FunctionInfo] = None
+
+    @property
+    def positional_params(self) -> List[str]:
+        if self.fn_lambda is not None:
+            a = self.fn_lambda.args
+            return [p.arg for p in a.posonlyargs + a.args]
+        if self.fn_info is not None:
+            return self.fn_info.positional_params
+        return []
+
+
+def _tuple_of_ints(node: Optional[ast.expr]) -> Tuple[int, ...]:
+    val = literal_or_none(node) if node is not None else None
+    if isinstance(val, int):
+        return (val,)
+    if isinstance(val, (tuple, list)) and all(
+            isinstance(v, int) for v in val):
+        return tuple(val)
+    return ()
+
+
+def _tuple_of_strs(node: Optional[ast.expr]) -> Tuple[str, ...]:
+    val = literal_or_none(node) if node is not None else None
+    if isinstance(val, str):
+        return (val,)
+    if isinstance(val, (tuple, list)) and all(
+            isinstance(v, str) for v in val):
+        return tuple(val)
+    return ()
+
+
+def _jit_call_parts(node: ast.Call):
+    """If ``node`` is ``jax.jit(fn, ...)`` return (fn_expr, kwargs)."""
+    if call_name(node) in ("jax.jit", "jit") and node.args:
+        return node.args[0], {k.arg: k.value for k in node.keywords}
+    return None
+
+
+def _partial_jit_parts(node: ast.Call):
+    """If ``node`` is ``functools.partial(jax.jit, ...)`` return kwargs."""
+    if call_name(node) in ("functools.partial", "partial") and node.args:
+        inner = node.args[0]
+        if isinstance(inner, (ast.Name, ast.Attribute)):
+            from repro.analysis.project import dotted_name
+            if dotted_name(inner) in ("jax.jit", "jit"):
+                return {k.arg: k.value for k in node.keywords}
+    return None
+
+
+class JitRegistry:
+    def __init__(self, project: Project):
+        self.project = project
+        # (class_name, attr) -> JitSite   e.g. ("ModelRunner", "_megastep")
+        self.attr_sites: Dict[Tuple[str, str], JitSite] = {}
+        # FunctionInfo.ref -> JitSite for @jit-decorated functions
+        self.decorated: Dict[str, JitSite] = {}
+        # (enclosing FunctionInfo.ref, local name) -> JitSite for
+        # ``fn = jax.jit(step, donate_argnums=...)`` inside a function
+        # (the dryrun / train-loop shape)
+        self.local_sites: Dict[Tuple[str, str], JitSite] = {}
+        self._collect()
+
+    # ------------------------------------------------------------------
+    def _collect(self) -> None:
+        for mod in self.project.modules:
+            for cls_name, cls_node in mod.classes.items():
+                for node in ast.walk(cls_node):
+                    if not isinstance(node, ast.Assign):
+                        continue
+                    if not isinstance(node.value, ast.Call):
+                        continue
+                    parts = _jit_call_parts(node.value)
+                    if parts is None:
+                        continue
+                    fn_expr, kwargs = parts
+                    for tgt in node.targets:
+                        if (isinstance(tgt, ast.Attribute)
+                                and isinstance(tgt.value, ast.Name)
+                                and tgt.value.id == "self"):
+                            self.attr_sites[(cls_name, tgt.attr)] = \
+                                self._site(f"{cls_name}.{tgt.attr}", mod,
+                                           node.lineno, fn_expr, kwargs)
+            for fn in mod.functions.values():
+                node = fn.node
+                if not isinstance(node,
+                                  (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                for sub in ast.walk(node):
+                    if not (isinstance(sub, ast.Assign)
+                            and isinstance(sub.value, ast.Call)):
+                        continue
+                    parts = _jit_call_parts(sub.value)
+                    if parts is None:
+                        continue
+                    fn_expr, kwargs = parts
+                    for tgt in sub.targets:
+                        if isinstance(tgt, ast.Name):
+                            self.local_sites[(fn.ref, tgt.id)] = self._site(
+                                f"{fn.qualname}.{tgt.id}", mod, sub.lineno,
+                                fn_expr, kwargs)
+                for dec in node.decorator_list:
+                    kwargs = None
+                    if isinstance(dec, ast.Call):
+                        kwargs = _partial_jit_parts(dec)
+                    elif isinstance(dec, (ast.Name, ast.Attribute)):
+                        from repro.analysis.project import dotted_name
+                        if dotted_name(dec) in ("jax.jit", "jit"):
+                            kwargs = {}
+                    if kwargs is None:
+                        continue
+                    site = JitSite(
+                        name=fn.qualname, module_rel=mod.rel,
+                        lineno=node.lineno,
+                        donate=_tuple_of_ints(kwargs.get("donate_argnums")),
+                        static_names=_tuple_of_strs(
+                            kwargs.get("static_argnames")),
+                        fn_info=fn)
+                    self.decorated[fn.ref] = site
+
+    def _site(self, name, mod, lineno, fn_expr, kwargs) -> JitSite:
+        site = JitSite(
+            name=name, module_rel=mod.rel, lineno=lineno,
+            donate=_tuple_of_ints(kwargs.get("donate_argnums")),
+            static_names=_tuple_of_strs(kwargs.get("static_argnames")))
+        if isinstance(fn_expr, ast.Lambda):
+            site.fn_lambda = fn_expr
+        elif isinstance(fn_expr, ast.Name):
+            site.fn_info = self.project.resolve_symbol(mod, fn_expr.id)
+        return site
+
+    # ------------------------------------------------------------------
+    def attr_site(self, cls_name: Optional[str],
+                  attr: str) -> Optional[JitSite]:
+        if cls_name is None:
+            return None
+        return self.attr_sites.get((cls_name, attr))
+
+    def decorated_site(self, fn_ref: str) -> Optional[JitSite]:
+        return self.decorated.get(fn_ref)
+
+    def local_site(self, fn_ref: str, name: str) -> Optional[JitSite]:
+        return self.local_sites.get((fn_ref, name))
+
+    def all_sites(self) -> List[JitSite]:
+        return (list(self.attr_sites.values())
+                + list(self.decorated.values())
+                + list(self.local_sites.values()))

@@ -1,0 +1,257 @@
+"""Source loading and indexing for the static checker.
+
+Everything here is stdlib-``ast`` only: the analyzer never imports the
+code under analysis, so it runs in CI without jax installed and cannot
+be confused by import-time side effects.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+# inline suppression: ``# repro: allow[R1,R4] reason`` on the finding's
+# line or the line directly above it.  The reason is mandatory — an
+# allow without one is ignored (and R-docs tell you why).
+_ALLOW_RE = re.compile(
+    r"#\s*repro:\s*allow\[([A-Z0-9,\s]+)\]\s*(\S.*)$")
+
+_DEFAULT_ROOTS = (
+    "src/repro/serving/engine.py::ServingEngine.step",
+    "src/repro/serving/engine.py::ServingEngine.stream",
+    "src/repro/serving/engine.py::ServingEngine.run_until_done",
+)
+
+
+@dataclass
+class FunctionInfo:
+    qualname: str                  # "Class.method" or "fn"
+    module: "SourceModule"
+    node: ast.AST                  # FunctionDef / AsyncFunctionDef
+    class_name: Optional[str] = None
+
+    @property
+    def params(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args]
+        if a.vararg:
+            names.append("*" + a.vararg.arg)
+        names += [p.arg for p in a.kwonlyargs]
+        return names
+
+    @property
+    def positional_params(self) -> List[str]:
+        a = self.node.args
+        return [p.arg for p in a.posonlyargs + a.args]
+
+    @property
+    def ref(self) -> str:
+        return f"{self.module.rel}::{self.qualname}"
+
+
+@dataclass
+class SourceModule:
+    rel: str                       # repo-relative posix path
+    tree: ast.Module
+    lines: List[str]
+    # lineno -> set of rules allowed there (inline suppressions)
+    allows: Dict[int, Set[str]] = field(default_factory=dict)
+    functions: Dict[str, FunctionInfo] = field(default_factory=dict)
+    classes: Dict[str, ast.ClassDef] = field(default_factory=dict)
+    # import name -> ("module", dotted) | ("symbol", dotted_mod, symbol)
+    imports: Dict[str, Tuple] = field(default_factory=dict)
+
+    @classmethod
+    def parse(cls, rel: str, source: str) -> "SourceModule":
+        tree = ast.parse(source, filename=rel)
+        lines = source.splitlines()
+        mod = cls(rel=rel, tree=tree, lines=lines)
+        mod._collect_allows()
+        mod._index(tree.body, prefix="", class_name=None)
+        mod._collect_imports()
+        return mod
+
+    # ---------------------------------------------------------- indexing
+    def _collect_allows(self) -> None:
+        for i, line in enumerate(self.lines, start=1):
+            m = _ALLOW_RE.search(line)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            # the allow covers its own line and the following one
+            # (comment-above style)
+            self.allows.setdefault(i, set()).update(rules)
+            self.allows.setdefault(i + 1, set()).update(rules)
+
+    def _index(self, body, prefix: str, class_name: Optional[str]) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{node.name}"
+                self.functions[qual] = FunctionInfo(
+                    qualname=qual, module=self, node=node,
+                    class_name=class_name)
+                # nested defs are indexed too (helper index_maps etc.)
+                self._index(node.body, prefix=qual + ".",
+                            class_name=class_name)
+            elif isinstance(node, ast.ClassDef):
+                self.classes[node.name] = node
+                self._index(node.body, prefix=node.name + ".",
+                            class_name=node.name)
+
+    def _collect_imports(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.imports[a.asname or a.name.split(".")[0]] = (
+                        "module", a.name)
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.imports[a.asname or a.name] = (
+                        "symbol", node.module, a.name)
+
+    def source_of(self, node: ast.AST) -> str:
+        try:
+            return ast.unparse(node)
+        except Exception:       # pragma: no cover - defensive
+            return "<unparseable>"
+
+
+class Project:
+    """A set of parsed modules plus cross-module lookup tables."""
+
+    def __init__(self, modules: List[SourceModule], roots=None):
+        self.modules = modules
+        self.by_rel = {m.rel: m for m in modules}
+        self.roots = list(roots) if roots is not None else \
+            [r for r in _DEFAULT_ROOTS if r.split("::")[0] in self.by_rel]
+        # dotted module name ("repro.serving.engine") -> SourceModule
+        self.by_dotted: Dict[str, SourceModule] = {}
+        for m in modules:
+            dotted = self._dotted(m.rel)
+            if dotted:
+                self.by_dotted[dotted] = m
+
+    # ------------------------------------------------------ construction
+    @classmethod
+    def from_root(cls, root, subdir="src/repro", roots=None) -> "Project":
+        root = Path(root)
+        mods = []
+        for p in sorted((root / subdir).rglob("*.py")):
+            rel = p.relative_to(root).as_posix()
+            mods.append(SourceModule.parse(rel, p.read_text()))
+        return cls(mods, roots=roots)
+
+    @classmethod
+    def from_sources(cls, sources: Dict[str, str], roots=None) -> "Project":
+        mods = [SourceModule.parse(rel, src)
+                for rel, src in sorted(sources.items())]
+        if roots is None:
+            # fixture default: every top-level function/method is a root
+            roots = [f.ref for m in mods for f in m.functions.values()]
+        return cls(mods, roots=roots)
+
+    # ---------------------------------------------------------- lookups
+    @staticmethod
+    def _dotted(rel: str) -> Optional[str]:
+        parts = Path(rel).with_suffix("").parts
+        if "repro" in parts:
+            parts = parts[parts.index("repro"):]
+        return ".".join(parts) if parts else None
+
+    def resolve_module(self, dotted: str) -> Optional[SourceModule]:
+        if dotted in self.by_dotted:
+            return self.by_dotted[dotted]
+        # "repro.models.transformer" vs entries keyed the same way; also
+        # accept a bare module name for single-file fixtures
+        for rel, m in self.by_rel.items():
+            if Path(rel).stem == dotted:
+                return m
+        return None
+
+    def resolve_symbol(self, module: SourceModule,
+                       name: str) -> Optional[FunctionInfo]:
+        """Resolve a bare name used in ``module`` to a project function:
+        local first, then ``from x import name``."""
+        if name in module.functions:
+            return module.functions[name]
+        imp = module.imports.get(name)
+        if imp and imp[0] == "symbol":
+            target = self.resolve_module(imp[1])
+            if target is not None:
+                return target.functions.get(imp[2])
+        return None
+
+    def resolve_attr_call(self, module: SourceModule,
+                          value: ast.expr,
+                          attr: str) -> Optional[FunctionInfo]:
+        """Resolve ``alias.attr(...)`` where ``alias`` is an imported
+        project module (``from repro.models import transformer as T``)."""
+        if isinstance(value, ast.Name):
+            imp = module.imports.get(value.id)
+            if imp:
+                dotted = imp[1] if imp[0] == "module" \
+                    else f"{imp[1]}.{imp[2]}"
+                target = self.resolve_module(dotted)
+                if target is not None:
+                    return target.functions.get(attr)
+        return None
+
+    def function(self, ref: str) -> Optional[FunctionInfo]:
+        """Look up "rel/path.py::Qual.name"."""
+        rel, _, qual = ref.partition("::")
+        mod = self.by_rel.get(rel)
+        return mod.functions.get(qual) if mod else None
+
+    def all_functions(self):
+        for m in self.modules:
+            yield from m.functions.values()
+
+    # ------------------------------------------------------ suppressions
+    def is_allowed(self, finding) -> bool:
+        mod = self.by_rel.get(finding.path)
+        if mod is None:
+            return False
+        return finding.rule in mod.allows.get(finding.line, ())
+
+
+# --------------------------------------------------------------------------
+# Shared AST utilities
+# --------------------------------------------------------------------------
+
+def call_name(node: ast.Call) -> str:
+    """Dotted text of a call target ("np.asarray", "self.runner.sample")."""
+    return dotted_name(node.func)
+
+
+def dotted_name(node: ast.expr) -> str:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def enclosing_functions(tree: ast.Module):
+    """Yield (qualname, node) for every def, with parent links attached
+    (node._repro_parent) for upward walks."""
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._repro_parent = node  # type: ignore[attr-defined]
+
+
+def iter_calls(node: ast.AST):
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            yield n
+
+
+def literal_or_none(node: ast.expr):
+    try:
+        return ast.literal_eval(node)
+    except Exception:
+        return None

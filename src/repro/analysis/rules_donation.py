@@ -1,0 +1,216 @@
+"""R2 — donation-safety.
+
+``donate_argnums`` hands a buffer to XLA: after the call, reading the
+donated python reference is undefined (on TPU it is a deleted buffer
+error; under CPU interpret it silently works, which is how these bugs
+ship).  For every call site of a donating jit executable this rule
+checks each donated argument:
+
+* **safe** if the same statement rebinds it (``out, self.state =
+  self._megastep(self.params, self.state, ...)`` — the canonical
+  consume-and-replace shape), or if nothing in the enclosing function
+  reads the same expression after the call before a rebind;
+* **finding** (``donation.use-after``) when a later read exists;
+* **finding** (``donation.alias``) when two donated positions receive
+  the textually identical expression — both can't own the buffer.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from repro.analysis.findings import Finding, finalize_occurrences
+from repro.analysis.jit_registry import JitRegistry, JitSite
+from repro.analysis.project import FunctionInfo, Project
+
+RULE = "R2"
+
+
+def _own_statements(fn_node):
+    """Statements of a function body in source order, not descending
+    into nested function definitions (they have their own FunctionInfo)."""
+    out = []
+
+    def rec(body):
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            out.append(stmt)
+            for field in ("body", "orelse", "finalbody"):
+                rec(getattr(stmt, field, []) or [])
+            for h in getattr(stmt, "handlers", []) or []:
+                rec(h.body)
+
+    rec(fn_node.body)
+    return out
+
+
+def _header_calls(stmt: ast.stmt):
+    """Calls belonging to ``stmt`` itself — for compound statements only
+    the header expressions (test / iter / items), since the nested bodies
+    appear as their own entries in ``_own_statements`` (a call must be
+    checked exactly once, at its innermost statement)."""
+    if isinstance(stmt, (ast.If, ast.While)):
+        headers = [stmt.test]
+    elif isinstance(stmt, ast.For):
+        headers = [stmt.iter]
+    elif isinstance(stmt, ast.With):
+        headers = [i.context_expr for i in stmt.items]
+    elif isinstance(stmt, ast.Try):
+        headers = []
+    else:
+        headers = [stmt]
+    for h in headers:
+        for n in ast.walk(h):
+            if isinstance(n, ast.Call):
+                yield n
+
+
+def _unparse(node: ast.expr) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:       # pragma: no cover - defensive
+        return ""
+
+
+def _targets_cover(targets: List[ast.expr], text: str) -> bool:
+    """Does any assignment target (or tuple element) rebind ``text``?"""
+    for tgt in targets:
+        elts = tgt.elts if isinstance(tgt, (ast.Tuple, ast.List)) else [tgt]
+        for e in elts:
+            if _unparse(e) == text:
+                return True
+            # ``self.state[k] = ...`` also rebinds ``self.state[k]`` when
+            # the subscript text matches exactly (handled above) — and a
+            # whole-object rebind covers any of its subscripts/attrs
+            if text.startswith(_unparse(e) + "[") \
+                    or text.startswith(_unparse(e) + "."):
+                return True
+    return False
+
+
+def _reads_in(stmt: ast.stmt, text: str) -> bool:
+    """Does ``stmt`` read an expression textually equal to ``text``
+    (outside of being a plain store target)?"""
+    store_ids = set()
+    if isinstance(stmt, ast.Assign):
+        for t in stmt.targets:
+            store_ids.add(id(t))
+            for e in getattr(t, "elts", []) or []:
+                store_ids.add(id(e))
+    for node in ast.walk(stmt):
+        if id(node) in store_ids:
+            continue
+        if isinstance(node, (ast.Name, ast.Attribute, ast.Subscript)) \
+                and isinstance(getattr(node, "ctx", None), ast.Load) \
+                and _unparse(node) == text:
+            return True
+    return False
+
+
+class DonationChecker:
+    def __init__(self, project: Project):
+        self.project = project
+        self.registry = JitRegistry(project)
+
+    # ------------------------------------------------------------------
+    def _site_for_call(self, fn: FunctionInfo,
+                       call: ast.Call) -> Optional[JitSite]:
+        f = call.func
+        if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+                and f.value.id == "self":
+            return self.registry.attr_site(fn.class_name, f.attr)
+        target = None
+        if isinstance(f, ast.Name):
+            local = self.registry.local_site(fn.ref, f.id)
+            if local is not None:
+                return local
+            target = self.project.resolve_symbol(fn.module, f.id)
+        elif isinstance(f, ast.Attribute):
+            target = self.project.resolve_attr_call(fn.module, f.value,
+                                                    f.attr)
+        if target is not None:
+            return self.registry.decorated_site(target.ref)
+        return None
+
+    def _donated_args(self, site: JitSite,
+                      call: ast.Call) -> Dict[int, ast.expr]:
+        """donated position -> argument expression at this call."""
+        params = site.positional_params
+        out: Dict[int, ast.expr] = {}
+        for pos in site.donate:
+            if pos < len(call.args):
+                out[pos] = call.args[pos]
+            elif pos < len(params):
+                for kw in call.keywords:
+                    if kw.arg == params[pos]:
+                        out[pos] = kw.value
+        return out
+
+    # ------------------------------------------------------------------
+    def check(self) -> List[Finding]:
+        findings: List[Finding] = []
+        for fn in self.project.all_functions():
+            stmts = _own_statements(fn.node)
+            for si, stmt in enumerate(stmts):
+                for call in _header_calls(stmt):
+                    site = self._site_for_call(fn, call)
+                    if site is None or not site.donate:
+                        continue
+                    self._check_call(fn, site, call, stmt, stmts[si + 1:],
+                                     findings)
+        return findings
+
+    def _check_call(self, fn, site, call, stmt, later, findings) -> None:
+        donated = self._donated_args(site, call)
+        texts = [(_unparse(e), pos) for pos, e in sorted(donated.items())]
+        seen: Dict[str, int] = {}
+        for text, pos in texts:
+            if not text:
+                continue
+            if text in seen:
+                findings.append(Finding(
+                    RULE, fn.module.rel, fn.qualname, "donation.alias",
+                    f"`{site.name}` donates positions {seen[text]} and "
+                    f"{pos} but both receive `{text}` — one buffer cannot "
+                    "be donated twice", call.lineno))
+                continue
+            seen[text] = pos
+            self._check_use_after(fn, site, call, stmt, later, text,
+                                  findings)
+
+    def _check_use_after(self, fn, site, call, stmt, later, text,
+                         findings) -> None:
+        # same-statement rebind (the canonical safe shape)
+        if isinstance(stmt, ast.Assign) and stmt.value is not None \
+                and any(n is call for n in ast.walk(stmt.value)) \
+                and _targets_cover(stmt.targets, text):
+            return
+        # constants / fresh expressions can't be read later
+        if not any(c.isalpha() for c in text):
+            return
+        for nxt in later:
+            if isinstance(nxt, ast.Assign) \
+                    and _targets_cover(nxt.targets, text) \
+                    and not _reads_in_value(nxt, text):
+                return                      # rebound before any read
+            if _reads_in(nxt, text):
+                findings.append(Finding(
+                    RULE, fn.module.rel, fn.qualname, "donation.use-after",
+                    f"`{text}` is donated to `{site.name}` (line "
+                    f"{call.lineno}) but read again on line "
+                    f"{nxt.lineno} — donated buffers are invalid after "
+                    "the call", call.lineno))
+                return
+
+
+def _reads_in_value(assign: ast.Assign, text: str) -> bool:
+    for node in ast.walk(assign.value):
+        if isinstance(node, (ast.Name, ast.Attribute, ast.Subscript)) \
+                and _unparse(node) == text:
+            return True
+    return False
+
+
+def check_donation(project: Project) -> List[Finding]:
+    return finalize_occurrences(DonationChecker(project).check())

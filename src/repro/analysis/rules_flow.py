@@ -1,0 +1,291 @@
+"""R5 — traced-control-flow.
+
+Python ``if``/``while`` on a traced value inside a jitted body raises
+``TracerBoolConversionError`` at trace time — but only on the paths a
+test actually traces, so CPU-interpret suites can pass while the TPU
+path is broken.  This rule finds them statically:
+
+1. seed traced-parameter sets from the jit registry (lambda sites trace
+   their lambda params, named sites everything except
+   ``static_argnames``),
+2. propagate interprocedurally: a callee param becomes traced when a
+   call from a traced function passes it a non-static expression; a
+   function passed *by name* (a ``pallas_call`` kernel body,
+   ``functools.partial(_kernel, ...)``) gets its ``*_ref`` params and
+   vararg traced, so partial-bound literal kwargs stay static,
+3. inside every function with traced params, flag ``if``/``while``
+   whose test is not provably static.
+
+"Static" is deliberately generous — ``.shape``/``.dtype``/``.ndim``,
+``len()``/``isinstance()``, ``x is (not) None``, ``key in tree``, and
+anything built only from non-traced names — because a false positive
+here teaches people to sprinkle allows.
+"""
+from __future__ import annotations
+
+import ast
+from collections import deque
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.callgraph import CallGraph
+from repro.analysis.findings import Finding, finalize_occurrences
+from repro.analysis.jit_registry import JitRegistry
+from repro.analysis.project import FunctionInfo, Project, call_name
+
+RULE = "R5"
+
+_META_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "sharding",
+               "aval", "weak_type"}
+_STATIC_CALLS = {"len", "isinstance", "hasattr", "callable", "type",
+                 "getattr", "range", "id", "repr", "str"}
+
+
+def _static_properties(project: Project) -> Set[str]:
+    """Names of ``@property`` methods on project classes whose return
+    value is static even on a traced instance — e.g. ``KVCache.quantized``
+    returning ``self.k_scale is not None``.  Branching on those is pytree
+    structure, not a traced value."""
+    props: Set[str] = set()
+    for mod in project.modules:
+        for fn in mod.functions.values():
+            node = fn.node
+            if not isinstance(node, ast.FunctionDef) \
+                    or fn.class_name is None:
+                continue
+            if not any(isinstance(d, ast.Name) and d.id == "property"
+                       for d in node.decorator_list):
+                continue
+            rets = [s.value for s in ast.walk(node)
+                    if isinstance(s, ast.Return) and s.value is not None]
+            if rets and all(_is_static(r, {"self"}) for r in rets):
+                props.add(node.name)
+    return props
+
+
+def _is_static(node: ast.AST, traced: Set[str],
+               static_attrs: Set[str] = frozenset()) -> bool:
+    def rec(n):
+        if n is None or isinstance(n, ast.Constant):
+            return True
+        if isinstance(n, ast.Name):
+            return n.id not in traced
+        if isinstance(n, ast.Attribute):
+            if n.attr in _META_ATTRS or n.attr in static_attrs:
+                return True
+            return rec(n.value)
+        if isinstance(n, ast.Subscript):
+            return rec(n.value) and rec(n.slice)
+        if isinstance(n, ast.Call):
+            if call_name(n).split(".")[-1] in _STATIC_CALLS:
+                return True
+            return (rec(n.func) and all(rec(a) for a in n.args)
+                    and all(rec(k.value) for k in n.keywords))
+        if isinstance(n, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in n.ops):
+                return True             # identity checks are python-level
+            if all(isinstance(op, (ast.In, ast.NotIn)) for op in n.ops):
+                return True             # pytree / dict key membership
+            return all(rec(c) for c in [n.left] + n.comparators)
+        if isinstance(n, ast.Lambda):
+            return True
+        if isinstance(n, (ast.BoolOp, ast.BinOp, ast.UnaryOp, ast.IfExp,
+                          ast.Tuple, ast.List, ast.Set, ast.Dict,
+                          ast.JoinedStr, ast.FormattedValue, ast.Starred,
+                          ast.Slice)):
+            return all(rec(c) for c in ast.iter_child_nodes(n)
+                       if isinstance(c, (ast.expr, ast.Slice)))
+        if isinstance(n, (ast.ListComp, ast.SetComp, ast.DictComp,
+                          ast.GeneratorExp)):
+            return all(rec(g.iter) for g in n.generators) \
+                and all(rec(c) for c in ast.iter_child_nodes(n)
+                        if isinstance(c, ast.expr))
+        return True                     # unknown shapes: stay quiet
+
+    return rec(node)
+
+
+def _target_names(tgt: ast.expr) -> Set[str]:
+    return {n.id for n in ast.walk(tgt) if isinstance(n, ast.Name)}
+
+
+def _bind(params: List[str], call: ast.Call) -> Dict[str, ast.expr]:
+    bound: Dict[str, ast.expr] = {}
+    for i, arg in enumerate(call.args):
+        if isinstance(arg, ast.Starred):
+            break
+        if i < len(params):
+            bound[params[i]] = arg
+    for kw in call.keywords:
+        if kw.arg is not None:
+            bound[kw.arg] = kw.value
+    return bound
+
+
+class FlowChecker:
+    def __init__(self, project: Project):
+        self.project = project
+        self.registry = JitRegistry(project)
+        self.graph = CallGraph(project)
+        self.static_attrs = _static_properties(project)
+        # FunctionInfo.ref -> set of traced parameter names
+        self.traced_params: Dict[str, Set[str]] = {}
+        self.queue = deque()
+        self._seed()
+        self._fixpoint()
+
+    # ------------------------------------------------------------- seeds
+    def _mark(self, fn: Optional[FunctionInfo], params: Set[str]) -> None:
+        if fn is None or not params:
+            return
+        cur = self.traced_params.setdefault(fn.ref, set())
+        if not params <= cur:
+            cur |= params
+            self.queue.append(fn.ref)
+
+    def _seed(self) -> None:
+        for site in self.registry.all_sites():
+            statics = set(site.static_names)
+            if site.fn_info is not None:
+                fn = site.fn_info
+                self._mark(fn, {p for p in fn.positional_params
+                                if p not in statics})
+            elif site.fn_lambda is not None:
+                mod = self.project.by_rel.get(site.module_rel)
+                if mod is None:
+                    continue
+                lam_params = {p.arg for p in site.fn_lambda.args.args
+                              if p.arg not in statics}
+                holder = FunctionInfo(qualname=f"<jit:{site.name}>",
+                                      module=mod, node=site.fn_lambda)
+                self._propagate_calls(holder, site.fn_lambda.body,
+                                      lam_params, class_name=None)
+
+    # ---------------------------------------------------------- fixpoint
+    def _fixpoint(self) -> None:
+        while self.queue:
+            ref = self.queue.popleft()
+            fn = self.project.function(ref)
+            if fn is None:
+                continue
+            traced = self._local_traced(fn, self.traced_params[ref],
+                                        findings=None)
+            self._propagate_calls(fn, fn.node, traced, fn.class_name)
+
+    def _propagate_calls(self, fn: FunctionInfo, root: ast.AST,
+                         traced: Set[str],
+                         class_name: Optional[str]) -> None:
+        for call in (n for n in ast.walk(root)
+                     if isinstance(n, ast.Call)):
+            callee = self._resolve(fn, call, class_name)
+            if callee is not None:
+                hot = {p for p, arg in
+                       _bind(callee.positional_params, call).items()
+                       if not _is_static(arg, traced, self.static_attrs)}
+                self._mark(callee, hot)
+            # functions passed by name: kernel bodies, partial targets
+            for arg in list(call.args) + [k.value for k in call.keywords]:
+                if isinstance(arg, ast.Name):
+                    cb = fn.module.functions.get(
+                        f"{fn.qualname}.{arg.id}") \
+                        or self.project.resolve_symbol(fn.module, arg.id)
+                    if cb is not None and isinstance(
+                            cb.node,
+                            (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        refs = {p for p in cb.params
+                                if p.endswith("_ref")
+                                or p.startswith("*")}
+                        self._mark(cb, refs)
+
+    def _resolve(self, fn: FunctionInfo, call: ast.Call,
+                 class_name: Optional[str]) -> Optional[FunctionInfo]:
+        f = call.func
+        if isinstance(f, ast.Name):
+            return fn.module.functions.get(f"{fn.qualname}.{f.id}") \
+                or self.project.resolve_symbol(fn.module, f.id)
+        if isinstance(f, ast.Attribute):
+            if isinstance(f.value, ast.Name) and f.value.id == "self" \
+                    and class_name:
+                return self.graph._method(class_name, f.attr)
+            return self.project.resolve_attr_call(fn.module, f.value,
+                                                  f.attr)
+        return None
+
+    # --------------------------------------------------- per-fn analysis
+    def _local_traced(self, fn: FunctionInfo, seed: Set[str],
+                      findings: Optional[List[Finding]]) -> Set[str]:
+        """Forward pass over the body: returns the final traced-name set;
+        when ``findings`` is given, flags traced if/while tests."""
+        traced = set(seed)
+
+        def visit(body):
+            for stmt in body:
+                if isinstance(stmt, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    continue
+                if isinstance(stmt, (ast.Assign, ast.AnnAssign,
+                                     ast.AugAssign)):
+                    value = getattr(stmt, "value", None)
+                    targets = stmt.targets \
+                        if isinstance(stmt, ast.Assign) else [stmt.target]
+                    names = set()
+                    for t in targets:
+                        names |= _target_names(t)
+                    if value is not None \
+                            and _is_static(value, traced,
+                                           self.static_attrs) \
+                            and not isinstance(stmt, ast.AugAssign):
+                        traced.difference_update(names)
+                    elif value is not None:
+                        traced.update(names)
+                elif isinstance(stmt, ast.For):
+                    if not _is_static(stmt.iter, traced,
+                                      self.static_attrs):
+                        traced.update(_target_names(stmt.target))
+                    else:
+                        traced.difference_update(
+                            _target_names(stmt.target))
+                    visit(stmt.body)
+                    visit(stmt.orelse)
+                elif isinstance(stmt, (ast.If, ast.While)):
+                    if findings is not None \
+                            and not _is_static(stmt.test, traced,
+                                               self.static_attrs):
+                        kind = "flow.traced-branch" \
+                            if isinstance(stmt, ast.If) \
+                            else "flow.traced-loop"
+                        word = "if" if isinstance(stmt, ast.If) \
+                            else "while"
+                        findings.append(Finding(
+                            RULE, fn.module.rel, fn.qualname, kind,
+                            f"python `{word} "
+                            f"{ast.unparse(stmt.test)}:` branches on a "
+                            "traced value inside a jitted body — use "
+                            "jnp.where / lax.cond / lax.while_loop",
+                            stmt.lineno))
+                    visit(stmt.body)
+                    visit(stmt.orelse)
+                elif isinstance(stmt, ast.Try):
+                    visit(stmt.body)
+                    for h in stmt.handlers:
+                        visit(h.body)
+                    visit(stmt.orelse)
+                    visit(stmt.finalbody)
+                elif isinstance(stmt, ast.With):
+                    visit(stmt.body)
+
+        visit(fn.node.body if not isinstance(fn.node, ast.Lambda) else [])
+        return traced
+
+    # ------------------------------------------------------------ report
+    def check(self) -> List[Finding]:
+        findings: List[Finding] = []
+        for ref in sorted(self.traced_params):
+            fn = self.project.function(ref)
+            if fn is None or not self.traced_params[ref]:
+                continue
+            self._local_traced(fn, self.traced_params[ref], findings)
+        return findings
+
+
+def check_traced_flow(project: Project) -> List[Finding]:
+    return finalize_occurrences(FlowChecker(project).check())

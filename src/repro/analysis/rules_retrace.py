@@ -1,0 +1,271 @@
+"""R3 — retrace-hazard.
+
+Two ways a call site silently multiplies jit cache entries:
+
+* **unstable-static** — a value derived from runtime quantities (a
+  ``len(...)``, a loop counter, arithmetic on either) is passed into a
+  ``static_argnames`` position: every distinct value is a fresh trace.
+  Static positions are tracked through one forwarding hop, so
+  ``ops.flash_attention(..., q_offset=off)`` is caught even though the
+  ``static_argnames`` declaration lives on the kernel it forwards to.
+* **varying-shape** — an array whose *shape* embeds a runtime quantity
+  (``np.zeros((len(seqs), maxlen))``) reaches a jit executable: every
+  distinct shape is a fresh trace.  Propagated through ``jnp.asarray``,
+  dict literals, and dict-subscript stores so the batched prefill dicts
+  are tracked end to end.
+
+Both are per-function, flow-forward, and fire only when an *unstable*
+name is syntactically present — config attributes, ``bool(...)`` flags
+and backend probes never contain one, so the fixed-shape serving paths
+stay silent.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from repro.analysis.findings import Finding, finalize_occurrences
+from repro.analysis.jit_registry import JitRegistry
+from repro.analysis.project import FunctionInfo, Project, call_name
+
+RULE = "R3"
+
+_SHAPE_CTORS = {"zeros", "ones", "empty", "full", "arange"}
+_ARRAY_WRAPS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+                "jnp.asarray", "jnp.array", "jax.numpy.asarray",
+                "jax.numpy.array"}
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _own_statements(fn_node):
+    out = []
+
+    def rec(body):
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            out.append(stmt)
+            for field in ("body", "orelse", "finalbody"):
+                rec(getattr(stmt, field, []) or [])
+            for h in getattr(stmt, "handlers", []) or []:
+                rec(h.body)
+
+    rec(fn_node.body)
+    return out
+
+
+def _unstable_names(fn: FunctionInfo) -> Set[str]:
+    """Names holding runtime-varying host scalars: len() results, loop
+    targets, and arithmetic derived from either."""
+    unstable: Set[str] = set()
+    for stmt in _own_statements(fn.node):
+        if isinstance(stmt, ast.For):
+            for n in ast.walk(stmt.target):
+                if isinstance(n, ast.Name):
+                    unstable.add(n.id)
+        if isinstance(stmt, (ast.Assign, ast.AugAssign)) \
+                and getattr(stmt, "value", None) is not None:
+            derived = False
+            v = stmt.value
+            if isinstance(v, ast.Call) and call_name(v) == "len":
+                derived = True
+            elif isinstance(v, (ast.BinOp, ast.UnaryOp)):
+                names = _names_in(v)
+                if names & unstable or any(
+                        isinstance(c, ast.Call) and call_name(c) == "len"
+                        for c in ast.walk(v)):
+                    derived = True
+            elif isinstance(v, ast.Name) and v.id in unstable:
+                derived = True
+            if derived:
+                targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                    else [stmt.target]
+                for tgt in targets:
+                    for n in ast.walk(tgt):
+                        if isinstance(n, ast.Name):
+                            unstable.add(n.id)
+    return unstable
+
+
+def _varying_names(fn: FunctionInfo, unstable: Set[str]) -> Set[str]:
+    """Names holding arrays (or containers of arrays) whose shape embeds
+    an unstable quantity."""
+    varying: Set[str] = set()
+    for stmt in _own_statements(fn.node):
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            tgt, v = stmt.targets[0], stmt.value
+            marked = False
+            if isinstance(v, ast.Call):
+                name = call_name(v)
+                if name.split(".")[-1] in _SHAPE_CTORS and v.args:
+                    if _names_in(v.args[0]) & unstable:
+                        marked = True
+                elif name in _ARRAY_WRAPS and v.args:
+                    if _names_in(v.args[0]) & varying:
+                        marked = True
+            elif isinstance(v, ast.Dict):
+                if any(_names_in(val) & varying
+                       for val in v.values if val is not None):
+                    marked = True
+            elif isinstance(v, (ast.DictComp, ast.ListComp)):
+                if any(_names_in(g.iter) & varying for g in v.generators):
+                    marked = True
+            elif isinstance(v, ast.IfExp):
+                if _names_in(v) & varying:
+                    marked = True
+            elif isinstance(v, ast.Name) and v.id in varying:
+                marked = True
+            if marked:
+                if isinstance(tgt, ast.Name):
+                    varying.add(tgt.id)
+                elif isinstance(tgt, ast.Subscript) \
+                        and isinstance(tgt.value, ast.Name):
+                    varying.add(tgt.value.id)
+            # dict-subscript store of a varying value marks the dict
+            if isinstance(tgt, ast.Subscript) \
+                    and isinstance(tgt.value, ast.Name) \
+                    and _names_in(v) & varying:
+                varying.add(tgt.value.id)
+    return varying
+
+
+class RetraceChecker:
+    def __init__(self, project: Project):
+        self.project = project
+        self.registry = JitRegistry(project)
+        # FunctionInfo.ref -> {param name} forwarded into a static position
+        self.forwarding: Dict[str, Set[str]] = {}
+        self._build_forwarding()
+
+    # ------------------------------------------------------------------
+    def _static_params_for_call(self, fn: FunctionInfo, call: ast.Call):
+        """(display name, positional params, static names, site-or-None)
+        when ``call`` targets a jit site or static-forwarding function."""
+        f = call.func
+        if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+                and f.value.id == "self":
+            site = self.registry.attr_site(fn.class_name, f.attr)
+            if site is not None:
+                return (site.name, site.positional_params,
+                        set(site.static_names), site)
+            return None
+        target = None
+        if isinstance(f, ast.Name):
+            target = self.project.resolve_symbol(fn.module, f.id)
+        elif isinstance(f, ast.Attribute):
+            target = self.project.resolve_attr_call(fn.module, f.value,
+                                                    f.attr)
+        if target is None:
+            return None
+        site = self.registry.decorated_site(target.ref)
+        statics: Set[str] = set(site.static_names) if site else set()
+        statics |= self.forwarding.get(target.ref, set())
+        if not statics and site is None:
+            return None
+        return target.qualname, target.positional_params, statics, site
+
+    def _build_forwarding(self) -> None:
+        """One hop: a param passed (as a bare name) into a static position
+        of a jit callable marks that param static-forwarding."""
+        for fn in self.project.all_functions():
+            params = set(fn.params)
+            fwd: Set[str] = set()
+            for call in (n for n in ast.walk(fn.node)
+                         if isinstance(n, ast.Call)):
+                hit = self._direct_static(fn, call)
+                if hit is None:
+                    continue
+                _, statics, bound = hit
+                for pname, arg in bound.items():
+                    if pname in statics and isinstance(arg, ast.Name) \
+                            and arg.id in params:
+                        fwd.add(arg.id)
+            if fwd:
+                self.forwarding[fn.ref] = fwd
+
+    def _direct_static(self, fn, call):
+        """Like ``_static_params_for_call`` but registry-only (no
+        forwarding — prevents recursion while building the map)."""
+        f = call.func
+        site = None
+        if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+                and f.value.id == "self":
+            site = self.registry.attr_site(fn.class_name, f.attr)
+        else:
+            target = None
+            if isinstance(f, ast.Name):
+                target = self.project.resolve_symbol(fn.module, f.id)
+            elif isinstance(f, ast.Attribute):
+                target = self.project.resolve_attr_call(fn.module, f.value,
+                                                        f.attr)
+            if target is not None:
+                site = self.registry.decorated_site(target.ref)
+        if site is None or not site.static_names:
+            return None
+        return site.name, set(site.static_names), _bind(site.positional_params,
+                                                        call)
+
+    # ------------------------------------------------------------------
+    def check(self) -> List[Finding]:
+        findings: List[Finding] = []
+        for fn in self.project.all_functions():
+            unstable = _unstable_names(fn)
+            varying = _varying_names(fn, unstable)
+            for call in (n for n in ast.walk(fn.node)
+                         if isinstance(n, ast.Call)):
+                self._check_call(fn, call, unstable, varying, findings)
+        return findings
+
+    def _check_call(self, fn, call, unstable, varying, findings) -> None:
+        hit = self._static_params_for_call(fn, call)
+        if hit is None:
+            return
+        name, params, statics, site = hit
+        bound = _bind(params, call)
+        for pname, arg in bound.items():
+            if pname not in statics:
+                continue
+            bad = sorted(_names_in(arg) & unstable)
+            if bad:
+                findings.append(Finding(
+                    RULE, fn.module.rel, fn.qualname,
+                    f"retrace.unstable-static.{pname}",
+                    f"static argument `{pname}` of `{name}` receives "
+                    f"`{ast.unparse(arg)}` — `{'`, `'.join(bad)}` varies "
+                    "at runtime, so every value compiles a new trace",
+                    call.lineno))
+        # varying-shape operands reaching a jit executable
+        if site is not None and not isinstance(call.func, ast.Lambda):
+            flagged: Set[str] = set()
+            for arg in list(call.args) + [k.value for k in call.keywords]:
+                bad = sorted((_names_in(arg) & varying) - flagged)
+                if bad:
+                    flagged.update(bad)
+                    findings.append(Finding(
+                        RULE, fn.module.rel, fn.qualname,
+                        f"retrace.varying-shape.{bad[0]}",
+                        f"`{name}` is called with `{ast.unparse(arg)}` "
+                        f"whose shape depends on runtime size "
+                        f"(`{'`, `'.join(bad)}`) — each distinct shape "
+                        "compiles a new trace", call.lineno))
+
+
+def _bind(params: List[str], call: ast.Call) -> Dict[str, ast.expr]:
+    """Map positional params to the argument expressions at a call."""
+    bound: Dict[str, ast.expr] = {}
+    for i, arg in enumerate(call.args):
+        if isinstance(arg, ast.Starred):
+            break
+        if i < len(params):
+            bound[params[i]] = arg
+    for kw in call.keywords:
+        if kw.arg is not None:
+            bound[kw.arg] = kw.value
+    return bound
+
+
+def check_retrace(project: Project) -> List[Finding]:
+    return finalize_occurrences(RetraceChecker(project).check())

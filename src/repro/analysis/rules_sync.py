@@ -1,0 +1,444 @@
+"""R1 — host-sync-in-hot-path.
+
+Taint analysis over the serving hot loop: values produced by jit
+executables (or jnp ops) are DEVICE; converting a DEVICE value to host
+data blocks the host on the device stream.  Sinks flagged:
+
+* ``np.asarray(x)`` / ``np.array(x)`` — implicit device->host copy
+* ``jax.device_get(x)``
+* ``x.item()`` / ``x.tolist()``
+* ``int(x)`` / ``float(x)`` / ``bool(x)``
+* iterating a device array (``for v in x``)
+* branching on a device array (``if x: ... `` / ``while x:``)
+
+Only *definitely-device* values fire — UNKNOWN stays silent, so the
+scheduler's host-numpy bookkeeping produces no noise.  The planned
+token readbacks (one per dispatch) are real findings carried in
+``analysis/baseline.json`` with justifications; anything new is creep
+the CI gate refuses.
+
+Cross-function precision comes from summaries: every project function
+gets a return-taint summary (fixpoint over 3 passes), including the
+"returns the result of calling its callable parameter" shape so
+``self._protected(rids, lambda: self.runner.megastep(...))`` carries
+the lambda body's taint to the call site.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from repro.analysis.callgraph import CallGraph
+from repro.analysis.findings import Finding, finalize_occurrences
+from repro.analysis.jit_registry import JitRegistry
+from repro.analysis.project import FunctionInfo, Project, call_name
+
+RULE = "R1"
+
+DEVICE, HOST, UNKNOWN = "device", "host", "unknown"
+
+# attribute reads that are host metadata even on a device array
+_META_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "sharding"}
+_DEVICE_ROOTS = ("jnp.", "jax.numpy.", "jax.lax.", "jax.random.", "jax.nn.",
+                 "jax.scipy.")
+_DEVICE_CALLS = {"jax.device_put", "jax.tree.map", "jax.vmap"}
+_HOST_ROOTS = ("np.", "numpy.", "math.", "time.", "os.")
+_CAST_SINKS = {"int", "float", "bool"}
+_COPY_SINKS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+
+
+class Tup:
+    """Taint of a tuple value (elementwise)."""
+    def __init__(self, elts):
+        self.elts = list(elts)
+
+
+class ListOf:
+    """Taint of a homogeneous container (element taint)."""
+    def __init__(self, item):
+        self.item = item
+
+
+def _join(a, b):
+    if isinstance(a, Tup) and isinstance(b, Tup) \
+            and len(a.elts) == len(b.elts):
+        return Tup([_join(x, y) for x, y in zip(a.elts, b.elts)])
+    if isinstance(a, ListOf) and isinstance(b, ListOf):
+        return ListOf(_join(a.item, b.item))
+    if a == b:
+        return a
+    if UNKNOWN in (a, b) or isinstance(a, (Tup, ListOf)) \
+            or isinstance(b, (Tup, ListOf)):
+        return UNKNOWN
+    # host vs device disagree -> unknown (silent)
+    return UNKNOWN
+
+
+def _scalar(t):
+    """Collapse compound taints for contexts that need a plain one."""
+    if isinstance(t, Tup):
+        if any(_scalar(e) == DEVICE for e in t.elts):
+            return DEVICE
+        return UNKNOWN if any(_scalar(e) == UNKNOWN for e in t.elts) else HOST
+    if isinstance(t, ListOf):
+        return _scalar(t.item)
+    return t
+
+
+class _Summary:
+    """Per-function summary: return taint, or 'calls param i'."""
+    def __init__(self):
+        self.ret = UNKNOWN
+        self.calls_param: Optional[int] = None  # positional index incl self
+
+
+class SyncAnalyzer:
+    def __init__(self, project: Project):
+        self.project = project
+        self.graph = CallGraph(project)
+        self.registry = JitRegistry(project)
+        self.summaries: Dict[str, _Summary] = {}
+        self._detect_param_calls()
+        for _ in range(3):                      # summary fixpoint
+            for fn in project.all_functions():
+                self._summarize(fn)
+
+    # ------------------------------------------------------- summaries
+    def _detect_param_calls(self) -> None:
+        for fn in self.project.all_functions():
+            s = self.summaries.setdefault(fn.ref, _Summary())
+            params = fn.positional_params
+            for node in ast.walk(fn.node):
+                if (isinstance(node, ast.Return) and node.value is not None
+                        and isinstance(node.value, ast.Call)
+                        and isinstance(node.value.func, ast.Name)
+                        and node.value.func.id in params):
+                    s.calls_param = params.index(node.value.func.id)
+
+    def _summarize(self, fn: FunctionInfo) -> None:
+        env: Dict[str, object] = {}
+        rets: List[object] = []
+        self._walk_body(fn, list(fn.node.body), env, rets, findings=None)
+        s = self.summaries.setdefault(fn.ref, _Summary())
+        if rets:
+            out = rets[0]
+            for r in rets[1:]:
+                out = _join(out, r)
+            s.ret = out
+
+    # ------------------------------------------------------ entry point
+    def hot_findings(self) -> List[Finding]:
+        hot = self.graph.reachable(self.project.roots)
+        findings: List[Finding] = []
+        for ref in sorted(hot):
+            fn = self.project.function(ref)
+            if fn is None:
+                continue
+            env: Dict[str, object] = {}
+            self._walk_body(fn, list(fn.node.body), env, rets=[],
+                            findings=(findings, fn))
+        return findings
+
+    # ------------------------------------------------------- statements
+    def _walk_body(self, fn, body, env, rets, findings) -> None:
+        for stmt in body:
+            self._stmt(fn, stmt, env, rets, findings)
+
+    def _stmt(self, fn, stmt, env, rets, findings) -> None:
+        ev = lambda e: self._eval(fn, e, env, findings)
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = getattr(stmt, "value", None)
+            t = ev(value) if value is not None else UNKNOWN
+            targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                else [stmt.target]
+            for tgt in targets:
+                self._bind(tgt, t, env)
+        elif isinstance(stmt, ast.Expr):
+            val = stmt.value
+            # container building: x.append((a, b)) refines x's taint
+            if (isinstance(val, ast.Call)
+                    and isinstance(val.func, ast.Attribute)
+                    and val.func.attr == "append"
+                    and isinstance(val.func.value, ast.Name)
+                    and len(val.args) == 1):
+                item = ev(val.args[0])
+                name = val.func.value.id
+                prev = env.get(name)
+                if isinstance(prev, ListOf):
+                    env[name] = ListOf(_join(prev.item, item)
+                                       if prev.item != UNKNOWN else item)
+                else:
+                    env[name] = ListOf(item)
+            else:
+                ev(val)
+        elif isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                rets.append(ev(stmt.value))
+        elif isinstance(stmt, ast.For):
+            it = ev(stmt.iter)
+            if _scalar(it) == DEVICE and not isinstance(it, (Tup, ListOf)):
+                self._report(findings, stmt.iter, "sync.iterate",
+                             "iterating a device array syncs per element: "
+                             f"`for ... in {ast.unparse(stmt.iter)}`")
+            self._bind_iter(stmt.target, it, env)
+            self._walk_body(fn, stmt.body, env, rets, findings)
+            self._walk_body(fn, stmt.orelse, env, rets, findings)
+        elif isinstance(stmt, (ast.If, ast.While)):
+            t = ev(stmt.test)
+            if _scalar(t) == DEVICE and not isinstance(t, (Tup, ListOf)):
+                self._report(findings, stmt.test, "sync.implicit-bool",
+                             "branching on a device array forces a sync: "
+                             f"`{ast.unparse(stmt.test)}`")
+            self._walk_body(fn, stmt.body, env, rets, findings)
+            self._walk_body(fn, stmt.orelse, env, rets, findings)
+        elif isinstance(stmt, ast.Try):
+            self._walk_body(fn, stmt.body, env, rets, findings)
+            for h in stmt.handlers:
+                self._walk_body(fn, h.body, env, rets, findings)
+            self._walk_body(fn, stmt.orelse, env, rets, findings)
+            self._walk_body(fn, stmt.finalbody, env, rets, findings)
+        elif isinstance(stmt, ast.With):
+            self._walk_body(fn, stmt.body, env, rets, findings)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            pass                    # nested defs analyzed via their own ref
+        else:
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    ev(child)
+
+    def _bind(self, tgt, t, env) -> None:
+        if isinstance(tgt, ast.Name):
+            env[tgt.id] = t
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            elts = t.elts if isinstance(t, Tup) \
+                and len(t.elts) == len(tgt.elts) \
+                else [_scalar(t) if _scalar(t) == DEVICE else UNKNOWN] \
+                * len(tgt.elts)
+            for e_tgt, e_t in zip(tgt.elts, elts):
+                self._bind(e_tgt, e_t, env)
+        # attribute / subscript stores: no attr env (self.state etc.)
+
+    def _bind_iter(self, tgt, it, env) -> None:
+        """Bind a for-loop target from the iterable's taint."""
+        if isinstance(it, ListOf):
+            self._bind(tgt, it.item, env)
+        elif _scalar(it) == DEVICE:
+            self._bind(tgt, DEVICE, env)
+        elif _scalar(it) == HOST:
+            self._bind(tgt, HOST, env)
+        else:
+            self._bind(tgt, UNKNOWN, env)
+
+    # ------------------------------------------------------ expressions
+    def _eval(self, fn, node, env, findings):
+        if node is None:
+            return UNKNOWN
+        if isinstance(node, ast.Constant):
+            return HOST
+        if isinstance(node, ast.Name):
+            return env.get(node.id, UNKNOWN)
+        if isinstance(node, ast.Tuple):
+            return Tup([self._eval(fn, e, env, findings)
+                        for e in node.elts])
+        if isinstance(node, ast.List):
+            item = UNKNOWN
+            for e in node.elts:
+                item = _join(item, self._eval(fn, e, env, findings)) \
+                    if item != UNKNOWN else self._eval(fn, e, env, findings)
+            return ListOf(item)
+        if isinstance(node, (ast.Dict, ast.DictComp, ast.Set)):
+            for child in ast.walk(node):
+                if isinstance(child, ast.Call):
+                    self._eval(fn, child, env, findings)
+            return UNKNOWN
+        if isinstance(node, ast.Attribute):
+            if node.attr in _META_ATTRS:
+                self._eval(fn, node.value, env, findings)
+                return HOST
+            base = self._eval(fn, node.value, env, findings)
+            return DEVICE if _scalar(base) == DEVICE else UNKNOWN
+        if isinstance(node, ast.Subscript):
+            base = self._eval(fn, node.value, env, findings)
+            self._eval(fn, node.slice, env, findings)
+            if isinstance(base, ListOf):
+                return base.item
+            if isinstance(base, Tup):
+                if isinstance(node.slice, ast.Constant) \
+                        and isinstance(node.slice.value, int) \
+                        and 0 <= node.slice.value < len(base.elts):
+                    return base.elts[node.slice.value]
+                return _scalar(base)
+            return _scalar(base) if _scalar(base) in (DEVICE, HOST) \
+                else UNKNOWN
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.Not):
+            # `not x` on a python container is host truthiness; only a
+            # bare device scalar would sync (reported via the If branch)
+            t = self._eval(fn, node.operand, env, findings)
+            return HOST if isinstance(t, (Tup, ListOf)) else _scalar(t)
+        if isinstance(node, ast.Compare) and all(
+                isinstance(op, (ast.In, ast.NotIn, ast.Is, ast.IsNot))
+                for op in node.ops):
+            # membership / identity: dict-key and None checks are
+            # host-level even when the container holds device arrays
+            for c in [node.left] + node.comparators:
+                self._eval(fn, c, env, findings)
+            return HOST
+        if isinstance(node, (ast.BinOp, ast.UnaryOp, ast.BoolOp,
+                             ast.Compare, ast.IfExp)):
+            parts = [self._eval(fn, c, env, findings)
+                     for c in ast.iter_child_nodes(node)
+                     if isinstance(c, ast.expr)]
+            scal = [_scalar(p) for p in parts]
+            if DEVICE in scal:
+                return DEVICE
+            if scal and all(s == HOST for s in scal):
+                return HOST
+            return UNKNOWN
+        if isinstance(node, (ast.ListComp, ast.GeneratorExp, ast.SetComp)):
+            local = dict(env)
+            for gen in node.generators:
+                it = self._eval(fn, gen.iter, local, findings)
+                self._bind_iter(gen.target, it, local)
+            return ListOf(self._eval(fn, node.elt, local, findings))
+        if isinstance(node, ast.Lambda):
+            return UNKNOWN          # evaluated at its call site
+        if isinstance(node, ast.Starred):
+            return self._eval(fn, node.value, env, findings)
+        if isinstance(node, ast.Call):
+            return self._call(fn, node, env, findings)
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self._eval(fn, child, env, findings)
+        return UNKNOWN
+
+    # ------------------------------------------------------------ calls
+    def _call(self, fn, node, env, findings):
+        name = call_name(node)
+        args = [self._eval(fn, a, env, findings) for a in node.args]
+        for k in node.keywords:
+            self._eval(fn, k.value, env, findings)
+        arg0 = args[0] if args else UNKNOWN
+
+        # ---- sinks -----------------------------------------------------
+        if name in _COPY_SINKS and _scalar(arg0) == DEVICE:
+            self._report(findings, node, "sync.np.asarray",
+                         f"`{ast.unparse(node)}` copies a device array to "
+                         "host (blocks on the device stream)")
+            return HOST
+        if name in ("jax.device_get",):
+            if _scalar(arg0) == DEVICE:
+                self._report(findings, node, "sync.device_get",
+                             f"`{ast.unparse(node)}` is an explicit "
+                             "device->host transfer")
+            return HOST
+        if name in _CAST_SINKS and len(node.args) == 1:
+            if _scalar(arg0) == DEVICE:
+                self._report(
+                    findings, node, "sync.cast",
+                    f"`{ast.unparse(node)}` collapses a device array to a "
+                    "python scalar (host sync)")
+            return HOST
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("item", "tolist"):
+            base = self._eval(fn, node.func.value, env, findings)
+            if _scalar(base) == DEVICE:
+                self._report(
+                    findings, node, f"sync.{node.func.attr}",
+                    f"`{ast.unparse(node)}` syncs a device array to host")
+            return HOST
+
+        # ---- sources ---------------------------------------------------
+        if name.startswith(_DEVICE_ROOTS) or name in _DEVICE_CALLS:
+            return DEVICE
+        if name.startswith(_HOST_ROOTS) or name in ("len", "sorted", "sum",
+                                                    "max", "min", "abs",
+                                                    "str", "repr", "round"):
+            return HOST
+        if name == "enumerate" and args:
+            return ListOf(Tup([HOST, args[0].item
+                               if isinstance(args[0], ListOf)
+                               else _scalar(args[0])]))
+        if name == "range":
+            return ListOf(HOST)
+        if name in ("list", "tuple") and args:
+            return args[0] if isinstance(args[0], (ListOf, Tup)) else UNKNOWN
+
+        # jit executables: self._megastep(...) and friends
+        if isinstance(node.func, ast.Attribute) \
+                and isinstance(node.func.value, ast.Name) \
+                and node.func.value.id == "self" and fn.class_name:
+            site = self.registry.attr_site(fn.class_name, node.func.attr)
+            if site is not None:
+                return DEVICE
+            target = self.graph._method(fn.class_name, node.func.attr)
+            if target is not None:
+                return self._apply_summary(fn, target, node, env, findings)
+
+        # self.attr.method(...) via the attribute-type map
+        if isinstance(node.func, ast.Attribute) \
+                and isinstance(node.func.value, ast.Attribute) \
+                and isinstance(node.func.value.value, ast.Name) \
+                and node.func.value.value.id == "self" and fn.class_name:
+            attr_cls = self.graph.attr_types.get(fn.class_name, {}).get(
+                node.func.value.attr)
+            if attr_cls:
+                target = self.graph._method(attr_cls, node.func.attr)
+                if target is not None:
+                    return self._apply_summary(fn, target, node, env,
+                                               findings)
+
+        # bare / imported project functions (incl. @jit-decorated)
+        target = None
+        if isinstance(node.func, ast.Name):
+            nm = node.func.id
+            target = fn.module.functions.get(f"{fn.qualname}.{nm}") \
+                or self.project.resolve_symbol(fn.module, nm)
+        elif isinstance(node.func, ast.Attribute):
+            target = self.project.resolve_attr_call(
+                fn.module, node.func.value, node.func.attr)
+        if target is not None:
+            if self.registry.decorated_site(target.ref) is not None:
+                return DEVICE
+            return self._apply_summary(fn, target, node, env, findings)
+        return UNKNOWN
+
+    def _apply_summary(self, fn, target, node, env, findings):
+        s = self.summaries.get(target.ref)
+        if s is None:
+            return UNKNOWN
+        if s.calls_param is not None:
+            # map the callable argument (account for the bound self)
+            idx = s.calls_param
+            if target.class_name is not None \
+                    and target.positional_params[:1] == ["self"]:
+                idx -= 1
+            if 0 <= idx < len(node.args):
+                cb = node.args[idx]
+                if isinstance(cb, ast.Lambda):
+                    return self._eval(fn, cb.body, env, findings)
+                if isinstance(cb, ast.Name):
+                    nested = fn.module.functions.get(
+                        f"{fn.qualname}.{cb.id}")
+                    if nested is not None:
+                        return self.summaries.get(nested.ref,
+                                                  _Summary()).ret
+                    other = self.project.resolve_symbol(fn.module, cb.id)
+                    if other is not None:
+                        return self.summaries.get(other.ref,
+                                                  _Summary()).ret
+            return UNKNOWN
+        return s.ret
+
+    # ---------------------------------------------------------- helpers
+    def _report(self, findings, node, kind, detail) -> None:
+        if findings is None:
+            return
+        out, fn = findings
+        out.append(Finding(RULE, fn.module.rel, fn.qualname, kind, detail,
+                           getattr(node, "lineno", 0)))
+
+
+def check_host_sync(project: Project) -> List[Finding]:
+    if not project.roots:
+        return []
+    return finalize_occurrences(SyncAnalyzer(project).hot_findings())

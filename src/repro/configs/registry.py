@@ -3,8 +3,8 @@ from __future__ import annotations
 
 from typing import Dict, List, Tuple
 
-from repro.configs.base import (ALL_SHAPES, DECODE_32K, LONG_500K, ModelConfig,
-                                PREFILL_32K, TRAIN_4K, ShapeConfig, reduced)
+from repro.configs.base import (ALL_SHAPES, LONG_500K, ModelConfig,
+                                ShapeConfig, reduced)
 from repro.configs import (qwen2_1_5b, qwen1_5_0_5b, h2o_danube_3_4b,
                            command_r_plus_104b, qwen2_moe_a2_7b,
                            kimi_k2_1t_a32b, falcon_mamba_7b,

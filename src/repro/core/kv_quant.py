@@ -223,7 +223,6 @@ def write_decode_kv_quant(values: jnp.ndarray, scales: jnp.ndarray,
     block with the recomputed amax.  positions: [B] absolute position of
     the new token; negative => inactive slot, write dropped.
     """
-    B = k_new.shape[0]
     NB, bs = values.shape[1], values.shape[2]
     valid = positions >= 0
     pos = jnp.maximum(positions, 0)

@@ -20,7 +20,6 @@ from repro.kernels.paged_attention import paged_attention as _paged_pallas
 from repro.kernels.paged_attention_quant import (
     paged_attention_quant as _paged_quant_pallas)
 from repro.kernels.gptq_matmul import gptq_matmul as _gptq_pallas
-from repro.core.quant import PACK
 
 
 def _on_tpu() -> bool:

@@ -7,7 +7,7 @@ lower on the CPU backend — see DESIGN.md §3).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -104,16 +104,9 @@ def hbm_bytes_fusion_aware(hlo_text: str) -> float:
     # donated inputs (params in train, KV pools in decode) alias their
     # outputs: in-place update fusions on them move only the update, not
     # the buffer. Track the alias chain across the program.
-    alias_nums = set()
-    m_alias = re.search(r"input_output_alias=\{([^\n]*)\}", hlo_text)
-    if m_alias:
-        alias_nums = {int(n) for n in
-                      re.findall(r"\((\d+),\s*\{\}", m_alias.group(1))}
     aliased: set = set()
-    param_re = re.compile(r"parameter\((\d+)\)")
     in_entry = False
     for line in hlo_text.splitlines():
-        stripped = line.strip()
         # computation headers start at column 0 (signatures may wrap over
         # several lines; the header line carries the name).
         if line and not line[0].isspace() and ("(" in line or
@@ -222,6 +215,8 @@ class RooflineTerms:
 
 def terms_from_compiled(compiled) -> RooflineTerms:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # jax 0.4.3x: one dict per computation
+        ca = ca[0] if ca else {}
     text = compiled.as_text()
     cb = collective_bytes(text)
     return RooflineTerms(

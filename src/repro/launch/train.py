@@ -13,7 +13,6 @@ import logging
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import ShapeConfig
@@ -22,7 +21,7 @@ from repro.data.pipeline import SyntheticLM
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models import transformer as T
 from repro.optim.adamw import AdamWConfig, init_opt_state
-from repro.runtime.fault import PreemptionError, StragglerDetector, Supervisor
+from repro.runtime.fault import PreemptionError, Supervisor
 from repro.runtime.sharding import make_ctx, param_shardings
 from repro.runtime.train_loop import jit_train_step
 
@@ -123,8 +122,8 @@ def main() -> None:
         return {"step": last_step, "trees": trees,
                 "extra": {"data": data.state()}}
 
-    final = sup.run(total_steps=args.steps, state=state, step_fn=do_step,
-                    restore_fn=restore_fn, fail_hook=fail_hook)
+    sup.run(total_steps=args.steps, state=state, step_fn=do_step,
+            restore_fn=restore_fn, fail_hook=fail_hook)
     log.info("done. first loss %.4f -> last loss %.4f (restarts: %d)",
              losses[0], losses[-1], sup.restarts)
 

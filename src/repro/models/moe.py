@@ -16,7 +16,6 @@ qwen2-moe); the router only ever produces logits for real experts.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional
 
 import jax

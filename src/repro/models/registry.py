@@ -3,7 +3,7 @@ for every (architecture × shape) dry-run cell."""
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ applied to training.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -163,7 +162,6 @@ def ssm_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One step. x: [B,d]; h: [B,din,N]; conv_state: [B,din,W-1]."""
     B, d = x.shape
-    W = cfg.ssm_conv
     xz = linear(x, p["in_proj"], rt)
     xi, z = jnp.split(xz, 2, axis=-1)                          # [B,din]
     window = jnp.concatenate([conv_state, xi[..., None]], axis=-1)  # [B,din,W]

@@ -7,7 +7,6 @@ paged KV pool / SSM state pools through the layer loop.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -449,7 +448,6 @@ def prefill(cfg: ModelConfig, params: Params, state: Dict[str, jnp.ndarray],
     """
     rt = rt or {}
     tokens, ctx_lens = batch["tokens"], batch["ctx_lens"]
-    B = tokens.shape[0]
     x = _embed_inputs(cfg, params, batch, ctx, rt)
     S = x.shape[1]
     if S != tokens.shape[1]:               # vlm: vision prefix counts as context

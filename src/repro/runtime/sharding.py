@@ -7,7 +7,7 @@ divide the axis size are replicated (e.g. 12 q-heads or 2 kv-heads on a
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Optional, Tuple
 
 import jax

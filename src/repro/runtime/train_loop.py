@@ -3,8 +3,7 @@ accumulation, remat policy, and optional int8 error-feedback gradient
 compression (on-the-wire all-to-all reduce — DESIGN.md §4)."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -29,7 +29,7 @@ without an injector (the default) never constructs one and pays a single
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Iterable, List, Optional, Sequence, Set
 
 import numpy as np

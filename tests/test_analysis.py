@@ -1,0 +1,448 @@
+"""repro.analysis static-checker tests: every rule fires on a seeded
+bad fixture and stays quiet on the corrected twin; finding keys /
+baseline diffing / the allow-comment escape hatch; the CLI gate's exit
+codes; and the R4 regression — the real Pallas wrappers' clamped page
+walks must pass the very check that flags the seed bug's unclamped
+walk.  Pure AST analysis: nothing here imports jax or runs device code.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze_project, analyze_source
+from repro.analysis.__main__ import main
+from repro.analysis.findings import (Baseline, Finding, finalize_occurrences,
+                                     load_baseline, write_baseline)
+from repro.analysis.project import Project
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def kinds(findings):
+    return sorted(f.kind for f in findings)
+
+
+# ------------------------------------------------------------------ R1
+
+R1_BAD = """
+import jax.numpy as jnp
+import numpy as np
+
+def hot(x):
+    y = jnp.exp(x)
+    return np.asarray(y)
+"""
+
+R1_OK = """
+import jax.numpy as jnp
+import numpy as np
+
+def hot(x):
+    y = jnp.exp(x)
+    n = y.shape[0]          # metadata: no device sync
+    h = np.arange(n)        # host array: np.asarray is free
+    return np.asarray(h), int(n)
+"""
+
+
+def test_r1_flags_device_readback():
+    found = analyze_source(R1_BAD, rules=("R1",))
+    assert len(found) == 1 and found[0].rule == "R1"
+    assert "np.asarray" in found[0].detail
+    assert found[0].qualname == "hot"
+
+
+def test_r1_quiet_on_host_values_and_metadata():
+    assert analyze_source(R1_OK, rules=("R1",)) == []
+
+
+def test_r1_item_readback_and_device_branch():
+    src = """
+import jax.numpy as jnp
+
+def hot(x):
+    s = jnp.sum(x)
+    if s:                   # implicit bool() on a device array
+        return s.item()     # explicit sync
+    return 0
+"""
+    found = analyze_source(src, rules=("R1",))
+    assert len(found) == 2
+
+
+# ------------------------------------------------------------------ R2
+
+R2_BAD = """
+import jax
+
+def _step(p, s):
+    return s
+
+def run(p, s0):
+    fn = jax.jit(_step, donate_argnums=(1,))
+    out = fn(p, s0)
+    return out + s0
+"""
+
+R2_OK = """
+import jax
+
+def _step(p, s):
+    return s
+
+def run(p, s0):
+    fn = jax.jit(_step, donate_argnums=(1,))
+    s0 = fn(p, s0)          # consume-and-replace: donated ref rebound
+    return s0
+"""
+
+
+def test_r2_flags_read_after_donation():
+    found = analyze_source(R2_BAD, rules=("R2",))
+    assert kinds(found) == ["donation.use-after"]
+    assert "`s0`" in found[0].detail
+
+
+def test_r2_quiet_on_same_statement_rebind():
+    assert analyze_source(R2_OK, rules=("R2",)) == []
+
+
+def test_r2_flags_aliased_donation():
+    src = """
+import jax
+
+def _step(a, b):
+    return a
+
+def run(x):
+    fn = jax.jit(_step, donate_argnums=(0, 1))
+    return fn(x, x)
+"""
+    found = analyze_source(src, rules=("R2",))
+    assert kinds(found) == ["donation.alias"]
+
+
+# ------------------------------------------------------------------ R3
+
+R3_BAD = """
+import jax
+import numpy as np
+
+def _model(p, b):
+    return b
+
+class Runner:
+    def __init__(self):
+        self._fn = jax.jit(_model)
+
+    def serve(self, p, items):
+        n = len(items)
+        batch = np.zeros((n, 4), np.int32)
+        return self._fn(p, batch)
+"""
+
+R3_OK = """
+import jax
+import numpy as np
+
+def _model(p, b):
+    return b
+
+class Runner:
+    def __init__(self):
+        self._fn = jax.jit(_model)
+
+    def serve(self, p, items):
+        batch = np.zeros((4, 8), np.int32)   # fixed shape: one trace
+        return self._fn(p, batch)
+"""
+
+
+def test_r3_flags_varying_shape_argument():
+    found = analyze_source(R3_BAD, rules=("R3",))
+    assert kinds(found) == ["retrace.varying-shape.batch"]
+
+
+def test_r3_quiet_on_fixed_shapes():
+    assert analyze_source(R3_OK, rules=("R3",)) == []
+
+
+def test_r3_flags_unstable_static_argument():
+    src = """
+import jax
+
+def _f(x, k):
+    return x
+
+class R:
+    def __init__(self):
+        self._fn = jax.jit(_f, static_argnames=("k",))
+
+    def go(self, xs):
+        n = len(xs)
+        return self._fn(xs, k=n)
+"""
+    found = analyze_source(src, rules=("R3",))
+    assert kinds(found) == ["retrace.unstable-static.k"]
+
+
+# ------------------------------------------------------------------ R4
+
+_R4_WRAPPER = """
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+B = 2
+KV = 1
+MB = 5
+BS = 4
+H = 2
+D = 4
+
+
+def _clamp_live(i, live, bs):
+    last = (live + bs - 1) // bs - 1
+    last = max(last, 0)
+    return min(i, last)
+
+
+def _kernel(bt_ref, sl_ref, q_ref, k_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(o_ref.dtype)
+
+
+def walk(bt, sl, q, kpages):
+    grid = (B, KV, MB)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, H, D), lambda b, kv, i, bt, sl: (b, 0, 0)),
+                pl.BlockSpec((1, BS, D),
+                             lambda b, kv, i, bt, sl: ({COL}, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H, D),
+                                   lambda b, kv, i, bt, sl: (b, 0, 0)),
+            scratch_shapes=[],
+        ),
+        out_shape=jax.ShapeDtypeStruct((1, H, D), q.dtype),
+    )(bt, sl, q, kpages)
+"""
+
+# the seed bug: the page walk strides the whole table width regardless
+# of how many pages are actually live for the sequence
+R4_BAD = _R4_WRAPPER.replace("{COL}", "bt[b, i]")
+# the fix: clamp the walk to the live prefix
+R4_OK = _R4_WRAPPER.replace("{COL}", "bt[b, _clamp_live(i, sl[b], BS)]")
+
+
+def test_r4_flags_unclamped_page_walk():
+    found = analyze_source(R4_BAD, rules=("R4",))
+    assert kinds(found) == ["kernel.page-walk-unbounded.<lambda>"]
+    assert "live" in found[0].detail
+
+
+def test_r4_clamped_page_walk_passes():
+    assert analyze_source(R4_OK, rules=("R4",)) == []
+
+
+def test_r4_flags_index_map_arity():
+    src = R4_OK.replace("lambda b, kv, i, bt, sl: (b, 0, 0)",
+                        "lambda b, kv, i: (b, 0, 0)", 1)
+    found = analyze_source(src, rules=("R4",))
+    assert "kernel.index-map-arity.<lambda>" in kinds(found)
+
+
+def test_r4_flags_kernel_body_arity():
+    src = R4_OK.replace("def _kernel(bt_ref, sl_ref, q_ref, k_ref, o_ref):",
+                        "def _kernel(bt_ref, sl_ref, q_ref, o_ref):")
+    found = analyze_source(src, rules=("R4",))
+    assert kinds(found) == ["kernel.body-arity._kernel"]
+
+
+def test_r4_flags_operand_count():
+    src = R4_OK.replace(")(bt, sl, q, kpages)", ")(bt, sl, q)")
+    found = analyze_source(src, rules=("R4",))
+    assert kinds(found) == ["kernel.operand-count"]
+
+
+def test_r4_flags_missing_out_astype():
+    src = """
+import jax
+from jax.experimental import pallas as pl
+
+def _k(x_ref, o_ref):
+    acc = x_ref[...] * 2
+    o_ref[...] = acc
+
+def mm(x):
+    return pl.pallas_call(
+        _k, grid=(1,),
+        in_specs=[pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((4,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((4,), x.dtype),
+    )(x)
+"""
+    found = analyze_source(src, rules=("R4",))
+    assert kinds(found) == ["kernel.out-dtype"]
+
+
+def test_r4_real_kernels_pass_clean():
+    """Regression: the repo's own Pallas wrappers (whose clamped page
+    walks ARE the fix for the seed bug this rule encodes) produce zero
+    kernel-contract findings."""
+    project = Project.from_root(REPO, subdir="src/repro")
+    assert analyze_project(project, rules=("R4",)) == []
+
+
+# ------------------------------------------------------------------ R5
+
+R5_BAD = """
+import jax
+
+@jax.jit
+def f(x):
+    if x > 0:
+        return x
+    return -x
+"""
+
+R5_OK = """
+import functools
+
+import jax
+
+@functools.partial(jax.jit, static_argnames=("flag",))
+def g(x, flag):
+    if flag:                # static arg: python-level branch is fine
+        x = x * 2
+    if x.shape[0] > 2:      # shape metadata: trace-static
+        x = x + 1
+    return x
+"""
+
+
+def test_r5_flags_traced_branch():
+    found = analyze_source(R5_BAD, rules=("R5",))
+    assert kinds(found) == ["flow.traced-branch"]
+    assert "x > 0" in found[0].detail
+
+
+def test_r5_quiet_on_static_and_metadata_branches():
+    assert analyze_source(R5_OK, rules=("R5",)) == []
+
+
+# -------------------------------------------------- keys and baseline
+
+def test_allow_comment_suppresses_finding():
+    src = R1_BAD.replace(
+        "return np.asarray(y)",
+        "return np.asarray(y)  # repro: allow[R1] planned readback")
+    assert analyze_source(src, rules=("R1",)) == []
+
+
+def test_occurrence_numbering_disambiguates_identical_sites():
+    src = """
+import jax.numpy as jnp
+import numpy as np
+
+def hot(x):
+    a = np.asarray(jnp.exp(x))
+    b = np.asarray(jnp.exp(x))
+    return a, b
+"""
+    found = analyze_source(src, rules=("R1",))
+    assert [f.occurrence for f in found] == [0, 1]
+    assert len({f.key for f in found}) == 2
+
+
+def test_finding_key_excludes_line_numbers():
+    a = Finding("R1", "m.py", "f", "sync.x", "detail", line=10)
+    b = Finding("R1", "m.py", "f", "sync.x", "detail", line=99)
+    assert a.key == b.key
+
+
+def test_finalize_occurrences_orders_by_source_position():
+    raw = [Finding("R1", "m.py", "f", "k", "d", line=30),
+           Finding("R1", "m.py", "f", "k", "d", line=10)]
+    out = finalize_occurrences(raw)
+    assert [(f.line, f.occurrence) for f in out] == [(10, 0), (30, 1)]
+
+
+def test_baseline_diff_and_validate():
+    f_known = Finding("R1", "m.py", "f", "k", "d", line=1)
+    f_new = Finding("R2", "m.py", "g", "k2", "d", line=2)
+    base = Baseline(entries={f_known.key: {"justification": "planned"},
+                             "R9:gone.py:h:k:0": {"justification": "x"}})
+    new, known, stale = base.diff([f_known, f_new])
+    assert [f.key for f in new] == [f_new.key]
+    assert [f.key for f in known] == [f_known.key]
+    assert stale == ["R9:gone.py:h:k:0"]
+    assert base.validate() == []
+    base.entries[f_known.key]["justification"] = "  "
+    assert base.validate() == [f_known.key]
+
+
+def test_baseline_io_round_trip(tmp_path):
+    path = tmp_path / "baseline.json"
+    f = Finding("R1", "m.py", "f", "k", "d", line=1)
+    write_baseline(path, [f])
+    base = load_baseline(path)
+    assert base.justification(f.key) == ""          # must be filled in
+    base.entries[f.key]["justification"] = "because"
+    # regeneration carries the justification forward
+    write_baseline(path, [f], previous=base)
+    assert load_baseline(path).justification(f.key) == "because"
+
+
+def test_baseline_rejects_unknown_version(tmp_path):
+    path = tmp_path / "baseline.json"
+    path.write_text('{"version": 99, "findings": {}}')
+    with pytest.raises(ValueError, match="version"):
+        load_baseline(path)
+
+
+# --------------------------------------------------------------- CLI
+
+def _cli(*extra):
+    return main(["--repo", str(REPO), "--root", "src/repro", *extra])
+
+
+def test_cli_exits_zero_against_checked_in_baseline(capsys):
+    assert _cli("--baseline", str(REPO / "analysis" / "baseline.json")) == 0
+    out = capsys.readouterr().out
+    assert "0 new" in out and "0 unjustified" in out
+
+
+def test_cli_fails_without_baseline(capsys):
+    # the tree carries justified findings: with no baseline they are new
+    assert _cli() == 1
+    assert "[NEW]" in capsys.readouterr().out
+
+
+def test_cli_rejects_unknown_rule():
+    assert _cli("--rules", "R1,R9") == 2
+
+
+def test_cli_rejects_missing_root():
+    assert main(["--repo", str(REPO), "--root", "no/such/dir"]) == 2
+
+
+def test_cli_update_baseline_then_gate(tmp_path, capsys):
+    """--update-baseline writes every current finding with an empty
+    justification, and the gate then fails until they are filled in —
+    an unjustified suppression is itself a failure."""
+    path = tmp_path / "baseline.json"
+    assert _cli("--baseline", str(path), "--update-baseline") == 0
+    assert _cli("--baseline", str(path)) == 1
+    assert "unjustified" in capsys.readouterr().out
+    base = load_baseline(path)
+    for entry in base.entries.values():
+        entry["justification"] = "test"
+    import json
+    path.write_text(json.dumps(
+        {"version": 1, "findings": base.entries}))
+    assert _cli("--baseline", str(path)) == 0

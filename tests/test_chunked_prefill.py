@@ -135,15 +135,18 @@ def test_chunked_fused_matches_chunked_legacy_bitwise(small):
     assert o_leg == o_fus
 
 
-def test_chunked_interleaves_decode_with_long_prefill(small):
+def test_chunked_interleaves_decode_with_long_prefill(
+        small, recompile_sentinel):
     """A long prompt arriving over a decoding batch no longer stalls it:
-    decode tokens keep flowing between its chunks (the ITL bound)."""
+    decode tokens keep flowing between its chunks (the ITL bound) — and
+    the warm executables compile nothing new while it chunks."""
     cfg, params = small
     eng = _engine(cfg, params, max_num_batched_tokens=12, max_slots=2,
                   num_blocks=128, max_blocks_per_seq=16)
     eng.add(_prompts(1, seed=41)[0], SamplingParams(max_tokens=40))
     for _ in range(3):                     # short prompt is decoding now
         eng.step()
+    recompile_sentinel.arm(eng.runner, "interleaved")
     long_prompt = _prompts(1, seed=42, lo=60, hi=61)[0]
     rid = eng.add(long_prompt, SamplingParams(max_tokens=4))
     decoded_during_prefill = 0
@@ -180,7 +183,8 @@ def test_preemption_mid_prefill_parity(small, kv_cache_dtype):
     assert roomy == tight
 
 
-def test_one_compile_across_heterogeneous_prompts(small):
+def test_one_compile_across_heterogeneous_prompts(
+        small, recompile_sentinel):
     """Acceptance: the chunk-prefill executable compiles exactly once no
     matter how prompt lengths and wave compositions vary, while the
     oracle's padded wave path recompiles per (wave, bucket) shape."""
@@ -190,6 +194,10 @@ def test_one_compile_across_heterogeneous_prompts(small):
                   max_blocks_per_seq=16, num_blocks=128)
     _drain(eng, prompts, [SamplingParams(max_tokens=4)] * 7)
     assert eng.runner.prefill_compiles() == 1
+    recompile_sentinel.arm(eng.runner, "chunked")
+    _drain(eng, _prompts(5, seed=62, lo=4, hi=90),
+           [SamplingParams(max_tokens=4)] * 5)
+    recompile_sentinel.check()
     oracle = _engine(cfg, params, enable_chunked_prefill=False,
                      max_blocks_per_seq=16, num_blocks=128)
     _drain(oracle, prompts, [SamplingParams(max_tokens=4)] * 7)

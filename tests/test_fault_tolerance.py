@@ -1,10 +1,7 @@
 """Checkpoint/restart, straggler detection, elastic re-mesh, data resume."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.checkpointer import AsyncCheckpointer, Checkpointer
 from repro.configs.base import ShapeConfig
@@ -51,7 +48,6 @@ def test_async_checkpointer(tmp_path):
 def test_supervisor_recovers_from_injected_failure(tmp_path):
     """Training survives a mid-run preemption and reaches total_steps."""
     ck = Checkpointer(str(tmp_path))
-    calls = {"n": 0}
 
     def step_fn(step, st):
         st = dict(st)

@@ -6,7 +6,7 @@ import pytest
 from repro.configs.base import QuantConfig
 from repro.core.gptq import (HessianAccumulator, gptq_quantize, quant_error,
                              rtn_quantize)
-from repro.core.quant import (dequantize, make_quant_params, pack_int4,
+from repro.core.quant import (make_quant_params, pack_int4,
                               quant_matmul_ref, unpack_int4)
 
 

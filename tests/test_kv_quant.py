@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs.registry import get_reduced
-from repro.core.kv_quant import (KVCache, copy_blocks_quant,
+from repro.core.kv_quant import (copy_blocks_quant,
                                  dequantize_blocks, gather_kv_quant,
                                  make_kv_pool_quant, normalize_kv_cache_dtype,
                                  quantize_blocks, write_decode_kv_quant,

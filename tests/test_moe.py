@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.registry import get_reduced
 from repro.models.moe import (moe_apply, moe_apply_dense_ref, moe_init,

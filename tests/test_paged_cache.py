@@ -24,7 +24,6 @@ def test_prefix_reuse_and_cow():
     ids2, r2 = a.allocate_prompt(p + [200])
     assert r1 == 0 and r2 == 2                     # two full blocks shared
     assert ids1[:2] == ids2[:2] and ids1[2] != ids2[2]
-    st = a.stats["allocated"]
     # exact-multiple prompt: shared tail is full; append allocates fresh blk
     ids3, r3 = a.allocate_prompt(p)
     assert r3 == 2 and len(ids3) == 2

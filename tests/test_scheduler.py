@@ -1,12 +1,11 @@
 """Host-side Scheduler unit tests: admission, watermark, clamping,
 horizon planning, preemption, capacity and the token-budget step planner
 (``plan_step``) — no model, no device arrays."""
-import numpy as np
 import pytest
 
 from repro.core.paged_cache import BlockAllocator
 from repro.serving.params import SamplingParams
-from repro.serving.scheduler import (PrefillChunk, RequestState, Scheduler,
+from repro.serving.scheduler import (RequestState, Scheduler,
                                      Sequence, StepPlan)
 
 BS = 4
@@ -383,7 +382,7 @@ def test_plan_step_property_random_arrivals():
     """Hypothesis sweep: for any arrival/budget/length mix the planner
     never exceeds the budget, never regresses computed_len, and never
     holds more blocks than whole-prompt admission would."""
-    hypothesis = pytest.importorskip("hypothesis")
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
     @settings(max_examples=25, deadline=None)

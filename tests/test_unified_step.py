@@ -97,9 +97,11 @@ def test_unified_preemption_mid_prefill_parity(small, kv_cache_dtype):
     assert roomy == tight
 
 
-def test_unified_one_compile_across_heterogeneous_prompts(small):
+def test_unified_one_compile_across_heterogeneous_prompts(
+        small, recompile_sentinel):
     """Acceptance: the unified step compiles exactly once no matter how
-    prompt lengths, chunk offsets and decode compositions vary."""
+    prompt lengths, chunk offsets and decode compositions vary — and a
+    second heterogeneous wave through the warm engine compiles nothing."""
     cfg, params = small
     prompts = _prompts(7, seed=61, lo=4, hi=120)
     eng = _engine(cfg, params, max_num_batched_tokens=32,
@@ -107,18 +109,25 @@ def test_unified_one_compile_across_heterogeneous_prompts(small):
     _drain(eng, prompts, [SamplingParams(max_tokens=4)] * 7)
     assert eng.runner.unified_compiles() == 1
     assert eng.runner.prefill_compiles() == 1
+    recompile_sentinel.arm(eng.runner, "unified")
+    _drain(eng, _prompts(5, seed=62, lo=4, hi=90),
+           [SamplingParams(max_tokens=4)] * 5)
+    recompile_sentinel.check()
 
 
-def test_unified_single_dispatch_in_steady_mixed_state(small):
+def test_unified_single_dispatch_in_steady_mixed_state(
+        small, recompile_sentinel):
     """One long prompt chunking over a warm decoding batch: every engine
     iteration in the steady mixed window is exactly ONE device dispatch
-    (the two-call path pays a decode + a chunk + a sample dispatch)."""
+    (the two-call path pays a decode + a chunk + a sample dispatch) —
+    and compiles nothing new."""
     cfg, params = small
     eng = _engine(cfg, params, max_num_batched_tokens=12, max_slots=2,
                   num_blocks=128, max_blocks_per_seq=16)
     eng.add(_prompts(1, seed=41)[0], SamplingParams(max_tokens=40))
     for _ in range(3):                     # short prompt is decoding now
         eng.step()
+    recompile_sentinel.arm(eng.runner, "steady-mixed")
     rid = eng.add(_prompts(1, seed=42, lo=60, hi=61)[0],
                   SamplingParams(max_tokens=4))
     eng.reset_dispatch_window()
