@@ -17,6 +17,15 @@ upfront pattern that aborts the run, which is the point of the policy;
 ``shed-oldest`` finishes the oldest waiting request with
 ``finish_reason='shed'``), and ``--deadline-ms`` attaches an end-to-end
 deadline to every request (``finish_reason='deadline'`` on expiry).
+
+Observability knobs (see docs/OBSERVABILITY.md): ``--metrics-port N``
+serves ``/metrics`` (Prometheus), ``/health`` (JSON) and ``/trace``
+(Chrome trace JSON) on localhost while the run executes;
+``--trace-out f.json`` writes the span timeline at exit (open in
+Perfetto); ``--metrics-out f.json`` dumps the registry snapshot;
+``--profile-dir d/`` wraps the run in a ``jax.profiler`` capture with
+per-dispatch TraceAnnotation labels; ``--no-enable-telemetry`` turns
+the span tracer off (the metrics registry is always on).
 """
 from __future__ import annotations
 
@@ -90,6 +99,23 @@ def main() -> None:
                     help="print RequestOutput deltas as they arrive")
     ap.add_argument("--mha-baseline", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--enable-telemetry",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="--no-enable-telemetry disables the span tracer "
+                         "(zero-work no-op); counters/histograms stay on")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics (Prometheus), /health (JSON) and "
+                         "/trace (Chrome JSON) on 127.0.0.1:PORT for the "
+                         "duration of the run")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the span timeline as Chrome-trace JSON "
+                         "at exit (load in Perfetto / about:tracing)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics-registry JSON snapshot at exit")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the run into "
+                         "this directory (adds TraceAnnotation labels to "
+                         "every device dispatch)")
     args = ap.parse_args()
 
     overrides = {}
@@ -110,7 +136,22 @@ def main() -> None:
                    enable_unified_step=args.enable_unified_step,
                    max_waiting=args.max_waiting,
                    shed_policy=args.shed_policy,
-                   prefill_bucket=32)
+                   prefill_bucket=32,
+                   enable_telemetry=args.enable_telemetry,
+                   profile_labels=bool(args.profile_dir))
+
+    server = None
+    if args.metrics_port is not None:
+        from repro.obs.http import start_obs_server
+        server = start_obs_server(args.metrics_port,
+                                  registry=llm.engine.obs,
+                                  health_fn=llm.engine.health,
+                                  tracer=llm.engine.tracer)
+        print(f"# obs endpoint on http://127.0.0.1:"
+              f"{server.server_address[1]} (/metrics /health /trace)")
+    if args.profile_dir:
+        import jax
+        jax.profiler.start_trace(args.profile_dir)
 
     rng = np.random.default_rng(args.seed)
     prefix = list(rng.integers(1, 200, 24))
@@ -133,6 +174,20 @@ def main() -> None:
             print(json.dumps({"rid": out.request_id,
                               "tokens": out.token_ids,
                               "finish_reason": out.finish_reason}))
+    if args.profile_dir:
+        import jax
+        jax.profiler.stop_trace()
+    if args.trace_out:
+        llm.engine.tracer.save(args.trace_out)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(llm.engine.obs.snapshot(), f, indent=1)
+    attr = llm.engine.attribution()
+    if attr["steps"]:
+        print(json.dumps({"attribution": {k: round(float(v), 4)
+                                          for k, v in attr.items()}}))
+    if server is not None:
+        server.shutdown()
     rep = llm.engine.report()
     mode = ("mha" if args.mha_baseline else "opt-gqa") + \
         (f"+{args.quant}" if args.quant else "") + \

@@ -7,8 +7,9 @@ from __future__ import annotations
 
 import logging
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 
@@ -25,7 +26,10 @@ class StragglerDetector:
     ema: Optional[float] = None
     alpha: float = 0.1
     _strikes: int = 0
-    events: List[Dict[str, float]] = field(default_factory=list)
+    #: most recent straggler flags only — a long-lived serving engine
+    #: observes every step forever, so an unbounded list is a slow leak
+    events: Deque[Dict[str, float]] = field(
+        default_factory=lambda: deque(maxlen=256))
 
     def observe(self, step: int, dt: float) -> str:
         if self.ema is None:

@@ -68,6 +68,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.paged_cache import BlockAllocator
 from repro.models import transformer as T
+from repro.obs.metrics import MetricsDict, MetricsRegistry
+from repro.obs.trace import SpanTracer, attribute_steps
 from repro.runtime.fault import StragglerDetector
 from repro.serving.faults import (FaultInjector, PoisonedDispatchError,
                                   TransientDeviceError)
@@ -116,7 +118,10 @@ class ServingEngine:
                  enable_guards: bool = True,
                  fault_injector: Optional[FaultInjector] = None,
                  max_dispatch_retries: int = 2,
-                 retry_backoff_s: float = 0.0):
+                 retry_backoff_s: float = 0.0,
+                 enable_telemetry: bool = True,
+                 trace_capacity: int = 65536,
+                 profile_labels: bool = False):
         if shed_policy not in ("reject", "shed-oldest"):
             raise ValueError(f"shed_policy {shed_policy!r}: expected "
                              "'reject' or 'shed-oldest'")
@@ -129,7 +134,17 @@ class ServingEngine:
         self.max_horizon = max(1, max_horizon)
         self.detokenizer = detokenizer
         self.seed = seed
-        self.metrics: Dict[str, float] = {
+        # ---- observability (tentpole: see docs/OBSERVABILITY.md) ----
+        # the registry is the single source of truth for every number
+        # report()/health() expose; the historical ``self.metrics`` dict
+        # survives as a MutableMapping facade over registry counters, so
+        # engine and scheduler call sites are unchanged.  The span
+        # tracer is the only piece ``enable_telemetry`` gates: metrics
+        # are core accounting (report()'s contract) and stay on.
+        self.obs = MetricsRegistry()
+        self.tracer = SpanTracer(capacity=trace_capacity,
+                                 enabled=enable_telemetry)
+        self.metrics: Dict[str, float] = MetricsDict(self.obs, initial={
             "prompt_tokens": 0, "gen_tokens": 0, "preemptions": 0,
             "host_syncs": 0, "decode_dispatches": 0, "decode_steps": 0,
             "decode_time_s": 0.0, "truncated_prompts": 0,
@@ -142,7 +157,30 @@ class ServingEngine:
             "device_dispatches": 0, "work_steps": 0,
             # robustness counters (see docs/API.md "Fault tolerance")
             "dispatch_retries": 0, "quarantined": 0, "shed": 0,
-            "aborted": 0, "deadline_expired": 0, "slow_steps": 0}
+            "aborted": 0, "deadline_expired": 0, "slow_steps": 0})
+        # per-request latency decompositions, derived from lifecycle
+        # events (arrival -> admitted -> first token -> finish)
+        self._h_queue_wait = self.obs.histogram(
+            "repro_request_queue_wait_ms",
+            help="arrival to first admission (slot assigned)")
+        self._h_ttft = self.obs.histogram(
+            "repro_request_ttft_ms",
+            help="arrival to first sampled token")
+        # bounded percentile window: a long-lived streaming engine must
+        # not grow a sample per token forever; 64k recent gaps is plenty
+        # for p99 (the cumulative buckets keep the full history)
+        self._h_itl = self.obs.histogram(
+            "repro_itl_ms", sample_maxlen=65536,
+            help="inter-token latency (per-event gaps, TTFT excluded)")
+        self._g_waiting = self.obs.gauge(
+            "repro_waiting", help="requests queued for admission")
+        self._g_running = self.obs.gauge(
+            "repro_running", help="requests holding a decode slot")
+        self._g_free_blocks = self.obs.gauge(
+            "repro_free_blocks", help="free KV pool blocks")
+        self._g_step_ema = self.obs.gauge(
+            "repro_step_time_ema_ms",
+            help="straggler watchdog's EMA of work-step wall time")
         # sliding-window-only archs use a fixed ring cache: no block growth
         ring_only = bool(cfg.sliding_window) and not any(
             cfg.layer_kind(i) == "full" for i in range(cfg.num_layers))
@@ -190,13 +228,12 @@ class ServingEngine:
                                   rt=rt, max_horizon=self.max_horizon,
                                   kv_cache_dtype=kv_cache_dtype,
                                   chunk_tokens=chunk_tokens,
-                                  unified=self.unified)
+                                  unified=self.unified,
+                                  tracer=self.tracer,
+                                  profile_labels=profile_labels)
         self.kv_cache_dtype = self.runner.kv_cache_dtype
         self._t0: Optional[float] = None
         self._next_rid = 0
-        # bounded window: a long-lived streaming engine must not grow a
-        # sample per token forever; 64k recent gaps is plenty for p99
-        self._itl_samples: deque = deque(maxlen=65536)
         # ---- robustness state (tentpole: see docs/API.md) ----
         self.max_waiting = None if max_waiting is None else int(max_waiting)
         self.shed_policy = shed_policy
@@ -275,6 +312,8 @@ class ServingEngine:
         rec = RequestState(rid=rid, prompt=list(prompt), sampling=sp,
                            base_key=self._base_key(rid, sp))
         self.scheduler.add(rec)
+        self.tracer.instant("req.arrival", cat="request",
+                            args={"rid": rid, "prompt_len": len(rec.prompt)})
         return rid
 
     def add_request(self, req: Request) -> None:
@@ -305,8 +344,22 @@ class ServingEngine:
         if req is None:
             return False
         self.metrics["aborted"] += 1
+        self.tracer.instant("req.abort", cat="request",
+                            args={"rid": request_id})
         self._emit(req, self._pending)
         return True
+
+    def _mark_admitted(self, reqs: SeqT[RequestState], now: float) -> None:
+        """First-admission lifecycle mark: the queue-wait histogram
+        sample (arrival -> slot assigned) plus a trace instant.
+        Re-admissions after preemption keep the original mark — queue
+        wait measures a request's first trip through the queue."""
+        for req in reqs:
+            if req.admitted_t is None:
+                req.admitted_t = now
+                self._h_queue_wait.observe((now - req.arrival) * 1e3)
+                self.tracer.instant("req.admitted", cat="request",
+                                    args={"rid": req.rid})
 
     # ------------------------------------------------------------ outputs
     def _emit(self, req: RequestState, outs: List[RequestOutput]) -> None:
@@ -321,9 +374,15 @@ class ServingEngine:
         if self.detokenizer is not None:
             # incremental: only the delta is detokenized per event, the
             # cumulative text accumulates on the request record
-            new_text = self.detokenizer(new) if new else ""
+            with self.tracer.span("detokenize", cat="host"):
+                new_text = self.detokenizer(new) if new else ""
             req.text += new_text
             text = req.text
+        if finished:
+            self.tracer.instant("req.finish", cat="request",
+                                args={"rid": req.rid,
+                                      "reason": req.finish_reason,
+                                      "tokens": len(req.output)})
         outs.append(RequestOutput(
             request_id=req.rid, prompt_token_ids=req.prompt_token_ids,
             token_ids=list(req.output), new_token_ids=new,
@@ -341,7 +400,7 @@ class ServingEngine:
             # inter-token latency sample: gap between this token-bearing
             # event and the request's previous one (TTFT excluded)
             if req.last_event_t is not None:
-                self._itl_samples.append(now - req.last_event_t)
+                self._h_itl.observe((now - req.last_event_t) * 1e3)
             req.last_event_t = now
         for tok in toks:
             if int(tok) < 0:
@@ -351,6 +410,8 @@ class ServingEngine:
                 # after it (fused horizons feed a clamped placeholder
                 # forward) is garbage and discarded with the sequence.
                 self.metrics["quarantined"] += 1
+                self.tracer.instant("req.quarantine", cat="request",
+                                    args={"rid": req.rid, "site": "nan_row"})
                 if self.faults is not None:
                     self.faults.forgive(req.rid)
                 self.scheduler.finish(s, FINISH_ERROR)
@@ -361,6 +422,9 @@ class ServingEngine:
             self.metrics["gen_tokens"] += 1
             if req.first_token_t is None:
                 req.first_token_t = now
+                self._h_ttft.observe((now - req.arrival) * 1e3)
+                self.tracer.instant("req.first_token", cat="request",
+                                    args={"rid": req.rid})
             if int(tok) in req.sampling.stop:
                 self.scheduler.finish(s, FINISH_STOP)
                 break
@@ -394,6 +458,8 @@ class ServingEngine:
 
     def _quarantine(self, rid: int, outs: List[RequestOutput]) -> None:
         self.metrics["quarantined"] += 1
+        self.tracer.instant("req.quarantine", cat="request",
+                            args={"rid": rid, "site": "dispatch"})
         if self.faults is not None:
             self.faults.forgive(rid)
         req = self.scheduler.abort(rid, FINISH_ERROR)
@@ -686,7 +752,12 @@ class ServingEngine:
                 self.metrics["host_syncs"] += 1
                 now = time.perf_counter()
                 for d, out in done:
-                    out_np = np.asarray(out)  # one bulk transfer per buffer
+                    # the readback span marks the step's host<->device
+                    # sync boundary on the timeline (attribution counts
+                    # it as device time: the host is blocked on the
+                    # device stream, not doing host work)
+                    with self.tracer.span("readback", cat="device"):
+                        out_np = np.asarray(out)  # one bulk transfer
                     for slot in d.decode_slots:
                         self._absorb(self.scheduler.running[slot],
                                      [int(out_np[slot])], now, outs)
@@ -710,7 +781,28 @@ class ServingEngine:
         points (dispatch wrappers, sampling rows, admission headroom,
         the step wall-clock), a poisoned dispatch lands in the recovery
         path instead of crashing the engine, and the straggler watchdog
-        observes every work step's wall time."""
+        observes every work step's wall time.
+
+        Telemetry rides it too (``enable_telemetry``, default on): the
+        whole iteration is an ``engine.step`` span with plan / dispatch
+        / readback / detokenize children on ``self.tracer``, which is
+        what ``attribution()`` decomposes into per-step host vs device
+        milliseconds — see docs/OBSERVABILITY.md."""
+        with self.tracer.span("engine.step", cat="step"):
+            outs = self._step_impl()
+        self._update_gauges()
+        return outs
+
+    def _update_gauges(self) -> None:
+        """Refresh the point-in-time gauges the ``/metrics`` endpoint
+        exposes (plain host floats; never dispatches)."""
+        self._g_waiting.set(len(self.scheduler.waiting))
+        self._g_running.set(len(self.scheduler.running))
+        self._g_free_blocks.set(self.alloc.num_free)
+        if self._straggler.ema is not None:
+            self._g_step_ema.set(self._straggler.ema * 1e3)
+
+    def _step_impl(self) -> List[RequestOutput]:
         if self._t0 is None:
             self._t0 = time.perf_counter()
         outs: List[RequestOutput] = self._pending  # abort/shed events first
@@ -734,20 +826,26 @@ class ServingEngine:
                 self._emit(req, outs)  # free slots/blocks before admission
             if not self.chunked:
                 admitted = self.scheduler.try_admit(alloc_blocked)
+                self._mark_admitted([s.req for s in admitted],
+                                    time.perf_counter())
                 if admitted:
                     self._run_prefill_oracle(admitted, outs)
                 for req in self.scheduler.finish_at_capacity():
                     self._emit(req, outs)  # a fresh exactly-cap prefill
                 if not self.scheduler.running:  # may be at the boundary
                     return outs
-                plan = self._prepare_dispatch(
-                    self.max_horizon if self.use_fused else 1)
+                with self.tracer.span("plan", cat="host"):
+                    plan = self._prepare_dispatch(
+                        self.max_horizon if self.use_fused else 1)
                 self._dispatch_decode(plan, outs)
                 return outs
-            plan = self.scheduler.plan_step(
-                self.max_num_batched_tokens,
-                max_horizon=self.max_horizon if self.use_fused else 1,
-                alloc_blocked=alloc_blocked)
+            with self.tracer.span("plan", cat="host"):
+                plan = self.scheduler.plan_step(
+                    self.max_num_batched_tokens,
+                    max_horizon=self.max_horizon if self.use_fused else 1,
+                    alloc_blocked=alloc_blocked)
+            self._mark_admitted([c.seq.req for c in plan.prefill],
+                                time.perf_counter())
             if self.unified and plan.prefill and plan.horizon <= 1:
                 self._dispatch_unified(plan, outs)
             else:
@@ -819,23 +917,32 @@ class ServingEngine:
         ITL percentiles cover only what follows — e.g. a steady-state
         window after warm-up/compile steps.  Live requests keep their
         last-event timestamps: a stall in progress still lands in the
-        first post-reset sample."""
-        self._itl_samples.clear()
+        first post-reset sample.  Only the percentile window resets; the
+        cumulative ``repro_itl_ms`` histogram buckets on ``/metrics``
+        keep the full history."""
+        self._h_itl.clear_samples()
 
-    def health(self) -> Dict[str, float]:
-        """O(1) liveness snapshot for load balancers / operators: queue
-        depth, pool pressure, and the robustness counters.  Never
-        dispatches, never blocks — safe to poll every step."""
+    def attribution(self, window: int = 50) -> Dict[str, float]:
+        """Steady-state host-vs-device wall-time split per engine step.
+
+        Decomposes the last ``window`` *work* steps (steps that issued
+        at least one device dispatch) from the span ring: ``device_ms``
+        is dispatch issue + the token-readback sync boundary,
+        ``host_ms`` is everything else the step did (plan, absorb,
+        detokenize, bookkeeping).  This is the measured form of the
+        ROADMAP item 1 diagnosis — the serialized host share the async
+        engine has to overlap away.  All-NaN (``steps == 0``) when
+        telemetry is disabled or nothing dispatched yet."""
+        return attribute_steps(self.tracer.spans(), window=window)
+
+    def _shared_snapshot(self) -> Dict[str, float]:
+        """The fields ``report()`` and ``health()`` both expose, computed
+        ONCE from the obs registry (the single source of truth) so the
+        two views can never drift apart.  Key names are the historical
+        ones — both public dicts splat this in unchanged."""
         m = self.metrics
         ema = self._straggler.ema
         return {
-            "waiting": float(len(self.scheduler.waiting)),
-            "running": float(len(self.scheduler.running)),
-            "max_waiting": float(self.max_waiting)
-            if self.max_waiting is not None else float("inf"),
-            "free_blocks": float(self.alloc.num_free),
-            "watermark_blocks": float(self.alloc.watermark),
-            "block_utilization": self.alloc.utilization(),
             "step_time_ema_ms": ema * 1e3 if ema is not None
             else float("nan"),
             "slow_steps": float(m["slow_steps"]),
@@ -844,6 +951,22 @@ class ServingEngine:
             "shed": float(m["shed"]),
             "aborted": float(m["aborted"]),
             "deadline_expired": float(m["deadline_expired"]),
+            "block_utilization": self.alloc.utilization(),
+        }
+
+    def health(self) -> Dict[str, float]:
+        """O(1) liveness snapshot for load balancers / operators: queue
+        depth, pool pressure, and the robustness counters.  Never
+        dispatches, never blocks — safe to poll every step (and what
+        the ``/health`` endpoint in ``launch/serve.py`` serves)."""
+        return {
+            "waiting": float(len(self.scheduler.waiting)),
+            "running": float(len(self.scheduler.running)),
+            "max_waiting": float(self.max_waiting)
+            if self.max_waiting is not None else float("inf"),
+            "free_blocks": float(self.alloc.num_free),
+            "watermark_blocks": float(self.alloc.watermark),
+            **self._shared_snapshot(),
             # rids still under poisoned-dispatch probation (0 = healthy)
             "probing_rids": float(len(self._probing or [])
                                   + sum(len(g) for g in self._suspects)),
@@ -871,7 +994,7 @@ class ServingEngine:
         # inter-token latency percentiles over per-event gaps: under
         # stop-the-world prefill the p99 carries the "one long prompt
         # stalls everyone" spikes the chunked planner bounds at O(chunk)
-        itl = np.asarray(self._itl_samples, np.float64)
+        itl = np.asarray(self._h_itl.samples(), np.float64)   # already ms
         itl_p50 = float(np.percentile(itl, 50)) if itl.size else float("nan")
         itl_p99 = float(np.percentile(itl, 99)) if itl.size else float("nan")
         plan_steps = self.metrics["plan_steps"]
@@ -881,8 +1004,9 @@ class ServingEngine:
         return {
             "latency_s": lat,
             "ttft_s": ttft,
-            "itl_p50_ms": itl_p50 * 1e3,
-            "itl_p99_ms": itl_p99 * 1e3,
+            "itl_p50_ms": itl_p50,
+            "itl_p99_ms": itl_p99,
+            "queue_wait_p50_ms": self._h_queue_wait.percentile(50),
             "prefill_chunks": self.metrics["prefill_chunks"],
             "prefill_compiles": self.runner.prefill_compiles(),
             # device calls per engine iteration (1.0 in the unified
@@ -896,16 +1020,8 @@ class ServingEngine:
             "throughput_tok_s": total_toks / wall,
             "generate_tok_s": self.metrics["gen_tokens"] / wall,
             "preemptions": self.metrics["preemptions"],
-            # robustness (satellite: StragglerDetector wired in + the
-            # tentpole's recovery/shedding counters)
-            "step_time_ema_ms": (self._straggler.ema or float("nan")) * 1e3,
-            "slow_steps": self.metrics["slow_steps"],
-            "dispatch_retries": self.metrics["dispatch_retries"],
-            "quarantined": self.metrics["quarantined"],
-            "shed": self.metrics["shed"],
-            "aborted": self.metrics["aborted"],
-            "deadline_expired": self.metrics["deadline_expired"],
-            "block_utilization": self.alloc.utilization(),
+            # robustness: the same registry-backed block health() serves
+            **self._shared_snapshot(),
             "blocks_reused": self.alloc.stats["reused"],
             # pool memory: the figure kv_cache_dtype="int8" halves vs bf16
             "kv_pool_bytes": self.runner.kv_pool_bytes(),

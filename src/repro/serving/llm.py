@@ -88,7 +88,9 @@ class LLM:
                     max_waiting, shed_policy, enable_guards,
                     fault_injector, max_dispatch_retries,
                     retry_backoff_s — see docs/API.md "Fault
-                    tolerance").
+                    tolerance"; observability: enable_telemetry,
+                    trace_capacity, profile_labels — see
+                    docs/OBSERVABILITY.md).
                     ``max_num_batched_tokens`` caps the tokens one
                     engine step may batch (decodes first, then prefill
                     chunks); ``enable_chunked_prefill=False`` restores

@@ -12,6 +12,7 @@ arrays are dead — always re-read ``runner.state``.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Dict, List, Optional, Sequence as Seq, Tuple
 
 import jax
@@ -24,6 +25,7 @@ from repro.core.kv_quant import (cache_from_state, cache_to_state,
 from repro.core.paged_cache import copy_blocks
 from repro.core.sampling import sample_from_logits
 from repro.models import transformer as T
+from repro.obs.trace import NULL_TRACER
 
 # decode-state entries that are pool-shaped [L, NB, ...] and therefore
 # owned globally by the engine (scattered whole, not per-slot)
@@ -36,9 +38,15 @@ class ModelRunner:
                  rt: Optional[dict] = None, max_horizon: int = 8,
                  state_dtype=jnp.float32, kv_cache_dtype: str = "bf16",
                  chunk_tokens: Optional[int] = None,
-                 unified: bool = False):
+                 unified: bool = False, tracer=None,
+                 profile_labels: bool = False):
         self.cfg = cfg
         self.params = params
+        # engine-owned span tracer (obs); NULL_TRACER = zero-work no-op
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        # when True, dispatches also carry jax.profiler.TraceAnnotation
+        # labels so a --profile-dir capture names each device region
+        self.profile_labels = bool(profile_labels)
         self.max_slots = max_slots
         self.num_blocks = num_blocks
         self.mb = max_blocks_per_seq
@@ -94,6 +102,15 @@ class ModelRunner:
         self._sample = jax.jit(sample_from_logits,
                                static_argnames=("guard",))
 
+    # ------------------------------------------------------------ obs
+    def _label(self, name: str):
+        """A ``jax.profiler.TraceAnnotation`` region when deep-dive
+        profiling is on (``--profile-dir``), else a free nullcontext —
+        the hot path never touches the profiler by default."""
+        if self.profile_labels:
+            return jax.profiler.TraceAnnotation(name)
+        return contextlib.nullcontext()
+
     # ------------------------------------------------------------ tables
     def sync_tables(self, running: Dict[int, "object"]) -> None:
         """Rebuild seq_lens / block_table device rows from host truth."""
@@ -135,7 +152,10 @@ class ModelRunner:
         sub["seq_lens"] = jnp.asarray(lens)
         batch = {"tokens": jnp.asarray(toks), "ctx_lens": jnp.asarray(lens)}
         self.dispatches += 1
-        logits, sub = self._prefill(self.params, sub, batch)
+        with self.tracer.span("dispatch:prefill", cat="device",
+                              args={"batch": B, "maxlen": maxlen}), \
+                self._label("prefill"):
+            logits, sub = self._prefill(self.params, sub, batch)
         for k in _POOL_KEYS:
             if k in sub:
                 self.state[k] = sub[k]
@@ -158,9 +178,12 @@ class ModelRunner:
         bt[0, :len(seq.block_ids)] = seq.block_ids
         cache = cache_from_state(self.state)
         self.dispatches += 1
-        logits, cache = self._prefill_chunk(
-            self.params, cache, jnp.asarray(toks), jnp.asarray(bt),
-            jnp.int32(start), jnp.int32(start + length))
+        with self.tracer.span("dispatch:chunk", cat="device",
+                              args={"start": start, "length": length}), \
+                self._label("prefill_chunk"):
+            logits, cache = self._prefill_chunk(
+                self.params, cache, jnp.asarray(toks), jnp.asarray(bt),
+                jnp.int32(start), jnp.int32(start + length))
         self.state.update(cache_to_state(cache))
         return logits
 
@@ -183,10 +206,13 @@ class ModelRunner:
         bt[0, :len(block_ids)] = block_ids
         sp = {k: jnp.asarray(v) for k, v in sampling.items()}
         self.dispatches += 1
-        out, self.state = self._unified(
-            self.params, self.state, jnp.asarray(tokens), sp,
-            jnp.asarray(active), jnp.asarray(toks), jnp.asarray(bt),
-            jnp.int32(start), jnp.int32(start + length))
+        with self.tracer.span("dispatch:unified", cat="device",
+                              args={"start": start, "length": length}), \
+                self._label("unified_step"):
+            out, self.state = self._unified(
+                self.params, self.state, jnp.asarray(tokens), sp,
+                jnp.asarray(active), jnp.asarray(toks), jnp.asarray(bt),
+                jnp.int32(start), jnp.int32(start + length))
         return out
 
     @staticmethod
@@ -222,8 +248,10 @@ class ModelRunner:
     def decode(self, tokens: np.ndarray) -> jnp.ndarray:
         """One per-token decode step for all slots; tokens: [max_slots]."""
         self.dispatches += 1
-        logits, self.state = self._decode(self.params, self.state,
-                                          jnp.asarray(tokens))
+        with self.tracer.span("dispatch:decode", cat="device"), \
+                self._label("decode"):
+            logits, self.state = self._decode(self.params, self.state,
+                                              jnp.asarray(tokens))
         return logits
 
     def megastep(self, tokens: np.ndarray, sampling: Dict[str, np.ndarray],
@@ -232,10 +260,14 @@ class ModelRunner:
         token buffer as numpy (the ONE host sync of the dispatch)."""
         sp = {k: jnp.asarray(v) for k, v in sampling.items()}
         self.dispatches += 1
-        out, self.state = self._megastep(
-            self.params, self.state, jnp.asarray(tokens), sp,
-            jnp.asarray(active), jnp.int32(n_steps))
-        return np.asarray(out[:n_steps])
+        with self.tracer.span("dispatch:megastep", cat="device",
+                              args={"n_steps": int(n_steps)}), \
+                self._label("megastep"):
+            out, self.state = self._megastep(
+                self.params, self.state, jnp.asarray(tokens), sp,
+                jnp.asarray(active), jnp.int32(n_steps))
+            with self.tracer.span("readback", cat="device"):
+                return np.asarray(out[:n_steps])
 
     def sample(self, logits, sampling: Dict[str, np.ndarray]) -> np.ndarray:
         """Per-slot sampling for the legacy loop / prefill first token.
@@ -246,11 +278,15 @@ class ModelRunner:
         kw = {}
         if "poison" in sampling:
             kw["poison"] = jnp.asarray(sampling["poison"])
-        return np.asarray(self._sample(
-            logits, jnp.asarray(sampling["keys"]),
-            jnp.asarray(sampling["counts"]), jnp.asarray(sampling["temps"]),
-            jnp.asarray(sampling["top_ks"]), jnp.asarray(sampling["top_ps"]),
-            guard=bool(self.rt.get("sampling_guard")), **kw))
+        with self.tracer.span("dispatch:sample", cat="device"), \
+                self._label("sample"):
+            return np.asarray(self._sample(
+                logits, jnp.asarray(sampling["keys"]),
+                jnp.asarray(sampling["counts"]),
+                jnp.asarray(sampling["temps"]),
+                jnp.asarray(sampling["top_ks"]),
+                jnp.asarray(sampling["top_ps"]),
+                guard=bool(self.rt.get("sampling_guard")), **kw))
 
     # ------------------------------------------------------------ CoW
     def copy_cow(self, pairs: Seq[Tuple[int, int]]) -> None:
@@ -267,9 +303,12 @@ class ModelRunner:
         self.dispatches += 1
         # int8 mode: the scale rows ride along with the value blocks —
         # a fork that dropped them would dequantize its prefix with junk
-        for k in _POOL_KEYS:
-            if k in self.state:
-                self.state[k] = copy_blocks(self.state[k], src, dst)
+        with self.tracer.span("dispatch:cow", cat="device",
+                              args={"pairs": len(pairs)}), \
+                self._label("copy_cow"):
+            for k in _POOL_KEYS:
+                if k in self.state:
+                    self.state[k] = copy_blocks(self.state[k], src, dst)
 
     # ------------------------------------------------------------ memory
     def kv_pool_bytes(self) -> int:

@@ -35,6 +35,7 @@ class RequestState:
     arrival: float = 0.0
     output: List[int] = field(default_factory=list)
     first_token_t: Optional[float] = None
+    admitted_t: Optional[float] = None    # first admission (queue-wait mark)
     done_t: Optional[float] = None
     finish_reason: Optional[str] = None
     emitted: int = 0               # tokens already surfaced via RequestOutput
