@@ -77,6 +77,13 @@ def main() -> None:
                          "mixed step (separate decode / prefill-chunk / "
                          "sample dispatches) — the unified single-"
                          "dispatch step's parity oracle")
+    ap.add_argument("--enable-async-step",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="--no-enable-async-step restores the read-back-"
+                         "every-step loop — the async pipelined step "
+                         "(plan/enqueue N+1 while N executes, tokens "
+                         "read back one step late) is on by default in "
+                         "unified mode")
     ap.add_argument("--max-waiting", type=int, default=None,
                     help="bound the waiting queue; arrivals past the "
                          "bound are handled per --shed-policy")
@@ -134,6 +141,7 @@ def main() -> None:
                    max_num_batched_tokens=args.max_num_batched_tokens,
                    enable_chunked_prefill=args.enable_chunked_prefill,
                    enable_unified_step=args.enable_unified_step,
+                   enable_async_step=args.enable_async_step,
                    max_waiting=args.max_waiting,
                    shed_policy=args.shed_policy,
                    prefill_bucket=32,
@@ -162,32 +170,38 @@ def main() -> None:
                         max_tokens=args.max_tokens,
                         deadline_ms=args.deadline_ms)
 
-    if args.stream:
-        for out in llm.stream(prompts, sp):
-            print(json.dumps({
-                "rid": out.request_id, "new": out.new_token_ids,
-                "n_total": len(out.token_ids),
-                "finish_reason": out.finish_reason}))
-    else:
-        outs = llm.generate(prompts, sp)
-        for out in outs:
-            print(json.dumps({"rid": out.request_id,
-                              "tokens": out.token_ids,
-                              "finish_reason": out.finish_reason}))
-    if args.profile_dir:
-        import jax
-        jax.profiler.stop_trace()
-    if args.trace_out:
-        llm.engine.tracer.save(args.trace_out)
-    if args.metrics_out:
-        with open(args.metrics_out, "w") as f:
-            json.dump(llm.engine.obs.snapshot(), f, indent=1)
-    attr = llm.engine.attribution()
-    if attr["steps"]:
-        print(json.dumps({"attribution": {k: round(float(v), 4)
-                                          for k, v in attr.items()}}))
-    if server is not None:
-        server.shutdown()
+    try:
+        if args.stream:
+            for out in llm.stream(prompts, sp):
+                print(json.dumps({
+                    "rid": out.request_id, "new": out.new_token_ids,
+                    "n_total": len(out.token_ids),
+                    "finish_reason": out.finish_reason}))
+        else:
+            outs = llm.generate(prompts, sp)
+            for out in outs:
+                print(json.dumps({"rid": out.request_id,
+                                  "tokens": out.token_ids,
+                                  "finish_reason": out.finish_reason}))
+        if args.profile_dir:
+            import jax
+            jax.profiler.stop_trace()
+        if args.trace_out:
+            llm.engine.tracer.save(args.trace_out)
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                json.dump(llm.engine.obs.snapshot(), f, indent=1)
+        attr = llm.engine.attribution()
+        if attr["steps"]:
+            print(json.dumps({"attribution": {k: round(float(v), 4)
+                                              for k, v in attr.items()}}))
+    finally:
+        # flush the async pipeline + detok worker, stop the obs server
+        # thread — even when the run aborts (EngineOverloadedError under
+        # --shed-policy reject, Ctrl-C, a poisoned run), nothing leaks
+        llm.close()
+        if server is not None:
+            server.shutdown()
     rep = llm.engine.report()
     mode = ("mha" if args.mha_baseline else "opt-gqa") + \
         (f"+{args.quant}" if args.quant else "") + \

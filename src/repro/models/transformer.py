@@ -801,6 +801,45 @@ def unified_step(cfg: ModelConfig, params: Params,
     return nxt, state
 
 
+def unified_step_chained(cfg: ModelConfig, params: Params,
+                         state: Dict[str, jnp.ndarray],
+                         prev_tokens: jnp.ndarray, chain_idx: jnp.ndarray,
+                         use_prev: jnp.ndarray, tokens: jnp.ndarray,
+                         sampling: Dict[str, jnp.ndarray],
+                         active: jnp.ndarray, chunk_tokens: jnp.ndarray,
+                         chunk_block_table: jnp.ndarray,
+                         pos_offset: jnp.ndarray, total_len: jnp.ndarray,
+                         ctx: Optional[ParallelCtx] = None,
+                         rt: Optional[dict] = None
+                         ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """``unified_step`` with on-device feed-token chaining — the async
+    pipelined engine's executable (one dispatch perpetually in flight).
+
+    When dispatch N+1 is enqueued, dispatch N's sampled tokens are still
+    on device: row ``r``'s feed token is gathered from the *previous
+    dispatch's output buffer* (``prev_tokens[chain_idx[r]]``, an
+    ``[B + 1]`` buffer whose row B is the chunk sample) when
+    ``use_prev[r]``, and from the host-known ``tokens[r]`` otherwise
+    (pipeline restart after a flush, or a slot whose last token was
+    absorbed on the host).  The gathered token is clamped at 0: a row
+    the non-finite guard sampled as ``-1`` must not index the embedding
+    — its successor token is garbage the engine discards at reconcile,
+    exactly the megastep's clamped-placeholder-forward contract.
+
+    Jit WITHOUT donation: the pipeline's whole point is that enqueueing
+    N+1 must not wait for N, and donating a buffer that is still being
+    produced by the in-flight dispatch forces the XLA CPU client to
+    execute synchronously (measured: zero host/device overlap).  The
+    non-donated state copy is the price of the overlap — ~2 MB on the
+    reduced serving configs, well under one step of host time.
+    """
+    fed = jnp.where(use_prev,
+                    jnp.clip(prev_tokens[chain_idx], 0, None), tokens)
+    return unified_step(cfg, params, state, fed, sampling, active,
+                        chunk_tokens, chunk_block_table, pos_offset,
+                        total_len, ctx, rt)
+
+
 def attn_prefill_ring(cfg, p, x, ctx, *, kind, cache, layer,
                       block_table, ctx_lens, rt):
     """Sliding-window prefill: compute flash-SWA attention, then write each

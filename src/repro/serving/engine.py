@@ -34,6 +34,21 @@ as the unified path's token-exact / bitwise-sampling parity oracle;
 ``report()['device_dispatches_per_step']`` shows the difference
 (1.0 unified vs ~2-3 two-call in the steady mixed state).
 
+``enable_async_step=True`` (default; rides the unified executable)
+pipelines the loop one step deep: an iteration plans and ENQUEUES its
+unified dispatch chained on the previous, still in-flight one — the
+decode feed tokens are gathered on device from that dispatch's output
+buffer — and only then reads the previous step's tokens back, so every
+host millisecond (plan, absorb, detokenize via the background worker,
+bookkeeping) overlaps device execution.  The scheduler plans
+speculatively (``Sequence.speculated``: in-flight tokens counted into
+``seq_len`` but not ``req.output``) and reconciles at readback;
+finish/abort/preemption during the flight discards the speculated
+token, which recompute replay regenerates token-exactly.  All donating
+dispatches (megastep, CoW, chunk bursts, the two-call oracle) flush
+the pipeline first.  ``enable_async_step=False`` keeps the
+read-back-every-step engine as the pipeline's parity oracle.
+
 Requests enter with a ``SamplingParams`` (temperature / top_k / top_p /
 seed / stop token ids / max_tokens) that is lowered to padded per-slot
 device arrays, so one batch freely mixes greedy, temperature and
@@ -71,6 +86,7 @@ from repro.models import transformer as T
 from repro.obs.metrics import MetricsDict, MetricsRegistry
 from repro.obs.trace import SpanTracer, attribute_steps
 from repro.runtime.fault import StragglerDetector
+from repro.serving.detok import DetokWorker
 from repro.serving.faults import (FaultInjector, PoisonedDispatchError,
                                   TransientDeviceError)
 from repro.serving.model_runner import ModelRunner
@@ -78,7 +94,7 @@ from repro.serving.params import (FINISH_ABORT, FINISH_ERROR, FINISH_LENGTH,
                                   FINISH_SHED, FINISH_STOP, RequestOutput,
                                   SamplingParams)
 from repro.serving.scheduler import (PrefillChunk, RequestState, Scheduler,
-                                     Sequence, StepPlan)
+                                     Sequence, StepPlan, UnifiedDispatch)
 
 
 class EngineOverloadedError(RuntimeError):
@@ -103,6 +119,25 @@ class Request:
     done_t: Optional[float] = None
 
 
+@dataclass
+class _Flight:
+    """One in-flight (enqueued, not yet read back) unified dispatch.
+
+    ``out`` is the dispatch's device-side ``[max_slots + 1]`` token
+    buffer — the NEXT dispatch gathers its feed tokens from it on
+    device, and the host reads it back one step later.  ``decode_rows``
+    / ``chunk_seq`` name the sequences whose sampled token the buffer
+    carries; ``source_row`` maps ``id(Sequence)`` to its row so the
+    successor dispatch can chain on it (row ``max_slots`` is the chunk
+    sample).  Holding the Sequence *objects* (not slots) lets the
+    collect path detect finish/abort/preemption-and-readmission during
+    the flight by identity."""
+    out: object
+    decode_rows: List[tuple] = field(default_factory=list)
+    chunk_seq: Optional[Sequence] = None
+    source_row: Dict[int, int] = field(default_factory=dict)
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
                  num_blocks: int = 512, max_blocks_per_seq: int = 64,
@@ -113,6 +148,7 @@ class ServingEngine:
                  max_num_batched_tokens: int = 256,
                  enable_chunked_prefill: bool = True,
                  enable_unified_step: bool = True,
+                 enable_async_step: bool = True,
                  max_waiting: Optional[int] = None,
                  shed_policy: str = "reject",
                  enable_guards: bool = True,
@@ -157,7 +193,10 @@ class ServingEngine:
             "device_dispatches": 0, "work_steps": 0,
             # robustness counters (see docs/API.md "Fault tolerance")
             "dispatch_retries": 0, "quarantined": 0, "shed": 0,
-            "aborted": 0, "deadline_expired": 0, "slow_steps": 0})
+            "aborted": 0, "deadline_expired": 0, "slow_steps": 0,
+            # iterations that ran pipelined: enqueued their dispatch
+            # chained on an in-flight one instead of blocking on it
+            "async_steps": 0})
         # per-request latency decompositions, derived from lifecycle
         # events (arrival -> admitted -> first token -> finish)
         self._h_queue_wait = self.obs.histogram(
@@ -213,6 +252,14 @@ class ServingEngine:
         # ``enable_unified_step=False`` as the parity oracle.
         self.unified = bool(enable_unified_step) and self.chunked \
             and use_fused
+        # async pipelined step (default; needs the unified executable):
+        # a mixed iteration ENQUEUES its unified dispatch chained on the
+        # previous (still in-flight) one and reads tokens back exactly
+        # one step late, so the whole host side of a step — plan,
+        # absorb, detokenize, bookkeeping — overlaps device execution.
+        # ``enable_async_step=False`` keeps the read-back-every-step
+        # engine as the pipeline's token-exactness oracle.
+        self.async_step = bool(enable_async_step) and self.unified
         # the per-step non-finite logit guard is a *static* flag baked
         # into the jitted executables at trace time: guards-off builds
         # trace byte-identical programs to a build that never heard of
@@ -250,6 +297,15 @@ class ServingEngine:
         # events produced outside step() (abort / shed): drained first
         # by the next step so stream()/run_until_done surface them
         self._pending: List[RequestOutput] = []
+        # ---- async pipeline state (see docs/PERF.md "Async pipeline") ----
+        # the un-collected in-flight dispatch, and the background worker
+        # every async-mode emission (tokens, aborts, sheds) routes
+        # through so detokenization overlaps the next device dispatch
+        # while per-request event order is preserved (FIFO worker)
+        self._flight: Optional[_Flight] = None
+        self._detok: Optional[DetokWorker] = \
+            DetokWorker(detokenizer, self.tracer) if self.async_step \
+            else None
 
     # ---------------------------------------------------- facade views
     @property
@@ -363,13 +419,28 @@ class ServingEngine:
 
     # ------------------------------------------------------------ outputs
     def _emit(self, req: RequestState, outs: List[RequestOutput]) -> None:
-        if req.shim is not None:     # legacy Request: mirror timestamps
-            req.shim.first_token_t = req.first_token_t
-            req.shim.done_t = req.done_t
         new = list(req.output[req.emitted:])
         finished = req.finish_reason is not None
         if not new and not finished:
             return
+        if self._detok is not None:
+            # async mode: EVERY emission (tokens, abort, shed, deadline)
+            # routes through the FIFO worker, so per-request event order
+            # is preserved while detokenization overlaps the in-flight
+            # dispatch.  The job snapshots its data here, on the engine
+            # thread; ``step()`` surfaces the built outputs one step of
+            # slack later.
+            if finished:
+                self.tracer.instant("req.finish", cat="request",
+                                    args={"rid": req.rid,
+                                          "reason": req.finish_reason,
+                                          "tokens": len(req.output)})
+            self._detok.submit(req, new, finished, req.finish_reason)
+            req.emitted = len(req.output)
+            return
+        if req.shim is not None:     # legacy Request: mirror timestamps
+            req.shim.first_token_t = req.first_token_t
+            req.shim.done_t = req.done_t
         text = new_text = ""
         if self.detokenizer is not None:
             # incremental: only the delta is detokenized per event, the
@@ -622,6 +693,20 @@ class ServingEngine:
         for i, (s, _) in enumerate(final):
             self._absorb(s, [int(nxt[i])], now, outs)
 
+    # ------------------------------------------------------------ readback
+    def _readback(self, out) -> np.ndarray:
+        """The host<->device sync boundary: one bulk transfer of a
+        dispatch's token buffer.  The span is cat="device" — the host is
+        blocked on the device stream, not doing host work — and lands in
+        the step that COLLECTS the tokens: under async pipelining that
+        is one step after the dispatch was enqueued, so its duration is
+        whatever device time the overlapped host work failed to hide
+        (near-zero in the steady state; see docs/OBSERVABILITY.md).
+        The single shared np.asarray sink for the sync unified dispatch
+        and the async collect (one justified R1 baseline entry)."""
+        with self.tracer.span("readback", cat="device"):
+            return np.asarray(out)
+
     # ------------------------------------------------------------ decode
     def _record_decode_time(self, dt: float, steps: int) -> None:
         self.metrics["decode_time_s"] += dt
@@ -752,12 +837,7 @@ class ServingEngine:
                 self.metrics["host_syncs"] += 1
                 now = time.perf_counter()
                 for d, out in done:
-                    # the readback span marks the step's host<->device
-                    # sync boundary on the timeline (attribution counts
-                    # it as device time: the host is blocked on the
-                    # device stream, not doing host work)
-                    with self.tracer.span("readback", cat="device"):
-                        out_np = np.asarray(out)  # one bulk transfer
+                    out_np = self._readback(out)
                     for slot in d.decode_slots:
                         self._absorb(self.scheduler.running[slot],
                                      [int(out_np[slot])], now, outs)
@@ -765,6 +845,140 @@ class ServingEngine:
                         self._absorb(d.chunk.seq,
                                      [int(out_np[self.max_slots])],
                                      now, outs)
+
+    # ------------------------------------------------------------ pipeline
+    def _enqueue_unified(self, d: UnifiedDispatch,
+                         outs: List[RequestOutput]) -> _Flight:
+        """Enqueue one unified dispatch WITHOUT reading it back, chained
+        on the in-flight dispatch's output buffer (the tentpole's device
+        half).  A decode row whose feed token is still in flight is fed
+        by a device-side gather (``use_prev``/``chain_idx`` into the
+        previous ``[max_slots + 1]`` buffer); rows whose token the host
+        already holds (pipeline restart after a flush) feed the host
+        value.  Host bookkeeping — tables, PRNG counts, chunk
+        completion, the speculative seq_len bumps — is identical to what
+        the synchronous engine would have done AFTER absorbing the
+        in-flight tokens, so planning and device state never diverge
+        from the oracle."""
+        sched = self.scheduler
+        prev = self._flight
+        # device tables: each slot's seq_len already counts its
+        # speculated token (the one this dispatch feeds and whose KV it
+        # writes at seq_len - 1) — exactly the sync post-absorb state
+        self.runner.sync_tables({slot: sched.running[slot]
+                                 for slot in d.decode_slots})
+        toks = np.zeros((self.max_slots,), np.int32)
+        chain_idx = np.zeros((self.max_slots,), np.int32)
+        use_prev = np.zeros((self.max_slots,), bool)
+        active = np.zeros((self.max_slots,), bool)
+        recs: List[Optional[RequestState]] = [None] * self.max_slots
+        rids = []
+        for slot in d.decode_slots:
+            s = sched.running[slot]
+            active[slot] = True
+            recs[slot] = s.req
+            rids.append(s.req.rid)
+            row = prev.source_row.get(id(s)) if prev is not None else None
+            if row is None:
+                toks[slot] = s.last_token     # host-known feed
+            else:
+                use_prev[slot] = True         # gather from in-flight buffer
+                chain_idx[slot] = row
+        c = d.chunk
+        recs.append(c.seq.req)                # row max_slots: the chunk
+        live = set(rids) | ({c.seq.req.rid} if d.sample_chunk else set())
+        sp = self._sampling_rows(recs, live=live)
+        for slot in d.decode_slots:
+            # the PRNG stream position counts every token SAMPLED so
+            # far — including the in-flight one this dispatch feeds,
+            # which req.output does not hold yet
+            sp["counts"][slot] += sched.running[slot].speculated
+        try:
+            out = self._protected(
+                rids + [c.seq.req.rid],
+                lambda: self.runner.unified_step_chained(
+                    prev.out if prev is not None else None,
+                    chain_idx, use_prev, toks, sp, active,
+                    c.seq.req.prompt, c.seq.block_ids, c.start, c.length))
+        except PoisonedDispatchError:
+            # bank the PREVIOUS dispatch's (completed, valid) tokens
+            # before recovery requeues this batch — survivors keep them
+            # and the fold-and-replay stays token-exact
+            self._collect_flight(outs)
+            raise
+        sched.complete_chunk(c)
+        self.metrics["prefill_chunks"] += 1
+        self.metrics["prompt_tokens"] += c.length
+        if d.decode_slots:
+            self.metrics["decode_dispatches"] += 1
+            self.metrics["decode_steps"] += 1
+        # speculation bumps AFTER the successful enqueue: every row
+        # whose sample this dispatch's buffer carries
+        flight = _Flight(out=out)
+        for slot in d.decode_slots:
+            s = sched.running[slot]
+            sched.speculate(s)
+            flight.decode_rows.append((slot, s))
+            flight.source_row[id(s)] = slot
+        if d.sample_chunk:
+            sched.speculate(c.seq)
+            flight.chunk_seq = c.seq
+            flight.source_row[id(c.seq)] = self.max_slots
+        return flight
+
+    def _collect_flight(self, outs: List[RequestOutput]) -> None:
+        """Read back the in-flight dispatch — the step's one blocking
+        point, deferred exactly one step — then reconcile and absorb its
+        tokens.  A row whose Sequence finished, aborted, expired, or was
+        preempted (even re-admitted into the same slot as a NEW record:
+        object identity catches it) while in flight is discarded with
+        the dead record; recompute replay regenerates the token
+        token-exactly via the counts-indexed sampling stream if the
+        request ever runs again.  No-op when nothing is in flight, so it
+        doubles as the pipeline flush every donating fallback dispatch
+        (megastep, CoW, chunk bursts, the two-call oracle) requires."""
+        fl = self._flight
+        if fl is None:
+            return
+        self._flight = None
+        out_np = self._readback(fl.out)
+        self.metrics["host_syncs"] += 1
+        now = time.perf_counter()
+        rows = list(fl.decode_rows)
+        if fl.chunk_seq is not None:
+            rows.append((self.max_slots, fl.chunk_seq))
+        for row, s in rows:
+            if s.req.finish_reason is not None \
+                    or self.scheduler.running.get(s.slot) is not s:
+                continue
+            self.scheduler.reconcile(s)
+            self._absorb(s, [int(out_np[row])], now, outs)
+
+    def _prune_plan(self, plan: StepPlan) -> None:
+        """Drop plan rows a pipeline flush invalidated: absorbing the
+        in-flight tokens can finish a planned decode slot (stop token,
+        quarantined NaN row) whose Sequence the dispatch path would then
+        look up.  Chunks never die here — mid-prefill slots have no
+        in-flight sample — and a freed slot's pending CoW copy lands in
+        a free block nothing reads before it is rewritten."""
+        plan.decode_slots = [sl for sl in plan.decode_slots
+                             if sl in self.scheduler.running]
+
+    def _dispatch_fallback(self, plan: StepPlan,
+                           outs: List[RequestOutput]) -> None:
+        """The synchronous dispatch selection (also the async engine's
+        non-pipelined fallback, after a flush): unified one-dispatch
+        mixed steps, else megastep + chunk walk."""
+        if self.unified and plan.prefill and plan.horizon <= 1:
+            self._dispatch_unified(plan, outs)
+        else:
+            # pure-decode plans keep the fused megastep (already one
+            # dispatch per multi-token horizon); with
+            # enable_unified_step=False this two-phase execute is the
+            # unified path's parity oracle
+            self._dispatch_decode(plan, outs)
+            if plan.prefill:
+                self._run_prefill_chunks(plan.prefill, outs)
 
     # ------------------------------------------------------------ drive
     def step(self) -> List[RequestOutput]:
@@ -787,9 +1001,26 @@ class ServingEngine:
         whole iteration is an ``engine.step`` span with plan / dispatch
         / readback / detokenize children on ``self.tracer``, which is
         what ``attribution()`` decomposes into per-step host vs device
-        milliseconds — see docs/OBSERVABILITY.md."""
+        milliseconds — see docs/OBSERVABILITY.md.
+
+        With ``enable_async_step`` (default, unified mode) the step is
+        PIPELINED: it plans and enqueues its dispatch chained on the
+        previous (still in-flight) one, then reads the previous step's
+        tokens back — so the returned events run one step behind the
+        device, and an extra ``step()`` or two after the scheduler
+        drains surfaces the tail (``stream`` / ``run_until_done`` /
+        ``close`` handle that)."""
         with self.tracer.span("engine.step", cat="step"):
-            outs = self._step_impl()
+            if self._detok is not None:
+                # async: this step's emissions land on the worker; what
+                # surfaces NOW is everything submitted before this step
+                # began — one step of slack hides detokenize latency
+                # under the in-flight dispatch
+                n0 = self._detok.submitted
+                tail = self._step_impl()
+                outs = self._detok.collect_upto(n0) + tail
+            else:
+                outs = self._step_impl()
         self._update_gauges()
         return outs
 
@@ -846,16 +1077,32 @@ class ServingEngine:
                     alloc_blocked=alloc_blocked)
             self._mark_admitted([c.seq.req for c in plan.prefill],
                                 time.perf_counter())
-            if self.unified and plan.prefill and plan.horizon <= 1:
-                self._dispatch_unified(plan, outs)
+            if self.async_step:
+                ds = plan.unified_dispatches()
+                if len(ds) == 1 and not plan.cow_pairs:
+                    # the tentpole fast path (the steady mixed state):
+                    # enqueue this step's single unified dispatch chained
+                    # on the in-flight one, THEN read the previous step's
+                    # tokens back — the new dispatch executes on device
+                    # while the host absorbs, plans and detokenizes
+                    flight = self._enqueue_unified(ds[0], outs)
+                    self._collect_flight(outs)
+                    self._flight = flight
+                    self.metrics["async_steps"] += 1
+                else:
+                    # leaving the pipelined regime (pure-decode megastep,
+                    # a multi-chunk admission burst, CoW copies, or no
+                    # schedulable work): every fallback dispatch donates
+                    # its inputs, so the in-flight dispatch is collected
+                    # first — and absorbing its tokens may finish
+                    # sequences the plan still references, so the plan is
+                    # pruned to the survivors
+                    if self._flight is not None:
+                        self._collect_flight(outs)
+                        self._prune_plan(plan)
+                    self._dispatch_fallback(plan, outs)
             else:
-                # pure-decode plans keep the fused megastep (already one
-                # dispatch per multi-token horizon); with
-                # enable_unified_step=False this two-phase execute is the
-                # unified path's parity oracle
-                self._dispatch_decode(plan, outs)
-                if plan.prefill:
-                    self._run_prefill_chunks(plan.prefill, outs)
+                self._dispatch_fallback(plan, outs)
             if plan.used:
                 self.metrics["plan_steps"] += 1
                 self.metrics["budget_tokens_used"] += plan.used
@@ -888,21 +1135,58 @@ class ServingEngine:
                     self._probing = None
                     self._advance_probe()
 
+    def _work_pending(self) -> bool:
+        """Drain condition for ``stream``/``run_until_done``: scheduler
+        work, an un-collected in-flight dispatch, or detokenize-worker
+        events not yet surfaced through ``step()`` — the async pipeline
+        runs the event stream one step behind the device, so the last
+        couple of steps exist purely to flush it."""
+        return self.scheduler.has_work() or self._flight is not None \
+            or bool(self._detok is not None and self._detok.pending())
+
     def stream(self, max_steps: int = 100000) -> Iterator[RequestOutput]:
         """Yield ``RequestOutput`` deltas as horizons complete — callers
         see first tokens while the batch is still running, and may keep
         calling ``add`` / ``add_request`` between events."""
         steps = 0
-        while self.scheduler.has_work() and steps < max_steps:
+        while self._work_pending() and steps < max_steps:
             yield from self.step()
             steps += 1
 
     def run_until_done(self, max_steps: int = 10000) -> Dict[str, float]:
         steps = 0
-        while self.scheduler.has_work() and steps < max_steps:
+        while self._work_pending() and steps < max_steps:
             self.step()
             steps += 1
         return self.report()
+
+    # ------------------------------------------------------------ shutdown
+    def close(self) -> List[RequestOutput]:
+        """Shut the pipeline down cleanly: read back any in-flight
+        dispatch (banking its tokens), drain and join the detokenize
+        worker, and return every event not yet surfaced through
+        ``step()`` (empty for a drained or synchronous engine).
+        Idempotent.  The engine is a context manager — ``with`` calls
+        this on exit — and ``launch/serve.py`` calls it on shutdown so
+        the worker thread and the in-flight dispatch never outlive the
+        server loop."""
+        outs: List[RequestOutput] = []
+        try:
+            self._collect_flight(outs)
+        finally:
+            if self._detok is not None:
+                worker, self._detok = self._detok, None
+                outs.extend(worker.close())
+        if self._pending:
+            outs = self._pending + outs
+            self._pending = []
+        return outs
+
+    def __enter__(self) -> "ServingEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def reset_dispatch_window(self) -> None:
         """Zero the device-dispatch counters so ``report()``'s
@@ -1027,6 +1311,9 @@ class ServingEngine:
             "kv_pool_bytes": self.runner.kv_pool_bytes(),
             "kv_bytes_per_token": self.runner.kv_bytes_per_token(),
             "wall_s": wall,
+            # iterations that ran pipelined (enqueue-then-collect): > 0
+            # proves the async path actually engaged in a bench window
+            "async_steps": self.metrics["async_steps"],
             "host_syncs": self.metrics["host_syncs"],
             "decode_dispatches": self.metrics["decode_dispatches"],
             "decode_steps": self.metrics["decode_steps"],

@@ -82,7 +82,7 @@ class LLM:
         engine_kw:  forwarded to ``ServingEngine`` (max_slots,
                     num_blocks, max_blocks_per_seq,
                     max_num_batched_tokens, enable_chunked_prefill,
-                    enable_unified_step,
+                    enable_unified_step, enable_async_step,
                     prefill_bucket [oracle path only], rt, use_fused,
                     max_horizon, detokenizer via __init__; robustness:
                     max_waiting, shed_policy, enable_guards,
@@ -98,7 +98,11 @@ class LLM:
                     oracle); ``enable_unified_step=False`` restores the
                     two-call mixed step (separate decode / chunk /
                     sample dispatches) instead of the default fused
-                    single-dispatch iteration.
+                    single-dispatch iteration;
+                    ``enable_async_step=False`` restores the
+                    read-back-every-step loop instead of the default
+                    one-step-deferred async pipeline (see docs/PERF.md
+                    "Async pipeline").
         """
         if quant not in QUANT_MODES:
             raise ValueError(f"unknown quant mode {quant!r}; "
@@ -193,3 +197,18 @@ class LLM:
         prompts may be added concurrently via ``llm.engine.add``."""
         self._submit(prompts, sampling_params)
         yield from self.engine.stream()
+
+    # ------------------------------------------------------------ shutdown
+    def close(self) -> None:
+        """Shut the engine down cleanly (flush the async pipeline, join
+        the detokenize worker — see ``ServingEngine.close``).  Events
+        still in flight are discarded here; drain with ``generate`` /
+        ``stream`` first if they matter.  Idempotent; ``with LLM.load(
+        ...) as llm:`` calls it automatically."""
+        self.engine.close()
+
+    def __enter__(self) -> "LLM":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -90,11 +90,29 @@ class ModelRunner:
         # pinned to [max_slots] decode rows and the [1, chunk_tokens]
         # chunk window, so it compiles exactly once.
         self._unified = None
+        self._unified_chained = None
         if self.unified:
             self._unified = jax.jit(
                 lambda p, s, t, sp, a, c, cbt, off, tl: T.unified_step(
                     cfg, p, s, t, sp, a, c, cbt, off, tl, None, self.rt),
                 donate_argnums=(1,))
+            # the async pipeline's executable: same unified step, but the
+            # decode feed tokens are gathered on device from the PREVIOUS
+            # dispatch's (still in-flight) output buffer.  Deliberately
+            # NOT donated: donating a buffer the in-flight dispatch is
+            # still producing forces the XLA CPU client to run the call
+            # synchronously (measured: zero host/device overlap), which
+            # is exactly what the pipeline exists to avoid.  The state
+            # copy this costs is ~the pool size per step and is hidden
+            # under the overlapped host work (see docs/PERF.md).
+            self._unified_chained = jax.jit(
+                lambda p, s, pv, ci, up, t, sp, a, c, cbt, off, tl:
+                T.unified_step_chained(cfg, p, s, pv, ci, up, t, sp, a,
+                                       c, cbt, off, tl, None, self.rt))
+        # host-known zero feed buffer for pipeline-restart dispatches
+        # (use_prev all False): allocated once so the chained executable
+        # keeps a single (shape, dtype) signature either way
+        self.zero_prev = jnp.zeros((max_slots + 1,), jnp.int32)
         # legacy-loop sampling: the SAME per-slot kernel the megastep runs,
         # jitted standalone so both paths are bitwise identical.  ``guard``
         # is trace-static (a python bool branching on jnp.isfinite): with
@@ -215,6 +233,40 @@ class ModelRunner:
                 jnp.int32(start), jnp.int32(start + length))
         return out
 
+    def unified_step_chained(self, prev_out, chain_idx: np.ndarray,
+                             use_prev: np.ndarray, tokens: np.ndarray,
+                             sampling: Dict[str, np.ndarray],
+                             active: np.ndarray, chunk_prompt: Seq[int],
+                             block_ids: Seq[int], start: int,
+                             length: int) -> jnp.ndarray:
+        """``unified_step`` for the async pipeline: the decode feed
+        tokens are gathered ON DEVICE from ``prev_out`` — the previous
+        dispatch's still-in-flight ``[max_slots + 1]`` output buffer —
+        wherever ``use_prev`` is set (``chain_idx`` names the source
+        row; row ``max_slots`` is the chunk sample).  Returns this
+        dispatch's own ``[max_slots + 1]`` buffer as a device array the
+        engine reads back one step later.  Non-donating (see __init__):
+        the previous state stays alive until its readback."""
+        W = self.chunk_tokens
+        toks = np.zeros((1, W), np.int32)
+        toks[0, :length] = chunk_prompt[start:start + length]
+        bt = np.zeros((1, self.mb), np.int32)
+        bt[0, :len(block_ids)] = block_ids
+        sp = {k: jnp.asarray(v) for k, v in sampling.items()}
+        if prev_out is None:
+            prev_out = self.zero_prev
+        self.dispatches += 1
+        with self.tracer.span("dispatch:unified_chained", cat="device",
+                              args={"start": start, "length": length}), \
+                self._label("unified_step_chained"):
+            out, self.state = self._unified_chained(
+                self.params, self.state, prev_out,
+                jnp.asarray(chain_idx), jnp.asarray(use_prev),
+                jnp.asarray(tokens), sp, jnp.asarray(active),
+                jnp.asarray(toks), jnp.asarray(bt),
+                jnp.int32(start), jnp.int32(start + length))
+        return out
+
     @staticmethod
     def _cache_size(fn) -> float:
         """Jit compile count via the wrapper's ``_cache_size`` (private
@@ -232,17 +284,24 @@ class ModelRunner:
         shape for the whole-prompt oracle (the recompile explosion the
         chunked path removes)."""
         if self.unified and self._unified is not None:
-            return self._cache_size(self._unified)
+            return self.unified_compiles()
         fn = self._prefill_chunk if self._prefill_chunk is not None \
             else self._prefill
         return self._cache_size(fn)
 
     def unified_compiles(self) -> float:
-        """Compile count of the unified step executable (NaN when unified
-        dispatch is off or the private jax cache API drifted)."""
+        """Max compile count across the unified step executables (NaN
+        when unified dispatch is off or the private jax cache API
+        drifted).  The async engine runs mixed steps through the chained
+        variant and the flush fallbacks through the donated one — each
+        fixed-shape executable must compile exactly once, so a healthy
+        run reads 1.0 whichever subset actually dispatched."""
         if self._unified is None:
             return float("nan")
-        return self._cache_size(self._unified)
+        counts = [self._cache_size(self._unified)]
+        if self._unified_chained is not None:
+            counts.append(self._cache_size(self._unified_chained))
+        return float(max(counts))
 
     # ------------------------------------------------------------ decode
     def decode(self, tokens: np.ndarray) -> jnp.ndarray:

@@ -70,6 +70,11 @@ class Sequence:
     last_token: int
     computed_len: int = 0          # prompt tokens already in the KV pool
     hashed_blocks: int = 0         # full blocks already content-addressed
+    # tokens sampled by an in-flight dispatch the host has not read back
+    # yet (async pipelined engine; see Scheduler.speculate/reconcile).
+    # Each one is counted into seq_len — the NEXT dispatch feeds it and
+    # writes its KV — but not yet into req.output.
+    speculated: int = 0
 
     @property
     def prefilling(self) -> bool:
@@ -287,7 +292,14 @@ class Scheduler:
         done = []
         for slot in list(self.running):
             s = self.running[slot]
-            if self.writes_left(s) <= 0:
+            if self.writes_left(s) <= 0 and not s.speculated:
+                # a speculated slot at the capacity wall still has its
+                # last token in flight: finishing now would discard it
+                # (the synchronous engine absorbs that token *before*
+                # this check runs).  The slot is decode-ineligible
+                # (``decodable`` filters it), its token lands at the
+                # next reconcile, and THIS check force-finishes it one
+                # step later — same final output, token kept.
                 done.append(self.finish(s, FINISH_CAPACITY))
         return done
 
@@ -380,25 +392,65 @@ class Scheduler:
                 return self._requeue(slot)
         return None
 
+    # ------------------------------------------------------------ speculation
+    def speculate(self, s: Sequence) -> None:
+        """Mark one sampled-but-not-read-back token on ``s`` (async
+        pipelined engine, at dispatch enqueue): the token is counted
+        into ``seq_len`` immediately — the next dispatch feeds it and
+        writes its KV at ``seq_len - 1``, so every planner position
+        computation (block growth, writes_left, capacity) sees exactly
+        the state the synchronous engine would after absorbing it —
+        while ``speculated`` remembers it is not yet in ``req.output``
+        (``decodable``/``plan_horizon`` subtract it from the tokens-
+        remaining budget: plan as if no slot finishes)."""
+        s.seq_len += 1
+        s.speculated += 1
+
+    def reconcile(self, s: Sequence) -> None:
+        """Retire one speculated token at readback (just before the
+        engine absorbs it): the absorb path re-increments ``seq_len``
+        itself, so the speculative bump is unwound here and absorb stays
+        the single source of truth for output/stop/finish bookkeeping.
+        A sequence that finished, aborted, or was preempted mid-flight
+        is never reconciled — its Sequence record (and the speculative
+        bump with it) is already gone and the in-flight token is simply
+        discarded."""
+        s.seq_len -= 1
+        s.speculated -= 1
+
     # ------------------------------------------------------------ horizon
     def decodable(self) -> Dict[int, Sequence]:
         """Running sequences whose prompt is fully in the KV pool — the
         only ones a decode dispatch may touch (mid-prefill sequences hold
-        their slot and blocks but contribute no decode work)."""
-        return {sl: s for sl, s in self.running.items() if not s.prefilling}
+        their slot and blocks but contribute no decode work).  Slots
+        whose in-flight speculated token already exhausts their
+        max_tokens budget or their block table sit out too: planning
+        them would decode past the boundary the synchronous engine
+        finishes at.  Both extra filters are scoped to speculated slots
+        so non-speculating callers (the synchronous engine, the oracle
+        path, standalone planner tests) see the historical behavior
+        unchanged — there absorb and finish_at_capacity retire such
+        slots before planning ever sees them."""
+        return {sl: s for sl, s in self.running.items()
+                if not s.prefilling
+                and (not s.speculated
+                     or (s.req.tokens_remaining() - s.speculated > 0
+                         and self.writes_left(s) > 0))}
 
     def plan_horizon(self, max_horizon: int) -> int:
         """steps_until_boundary: the longest horizon every decodable
         sequence can decode without host intervention — bounded by tokens
-        remaining (finish boundary) and by free KV blocks (allocation
-        boundary).  Preempts the youngest *running* sequence (possibly a
-        mid-prefill one) if even a single step cannot fit."""
+        remaining (finish boundary, minus any in-flight speculated
+        token) and by free KV blocks (allocation boundary).  Preempts
+        the youngest *running* sequence (possibly a mid-prefill one) if
+        even a single step cannot fit."""
         while True:
             dec = list(self.decodable().values())
             if not dec:
                 return 0
             h = min(max_horizon,
-                    min(min(s.req.tokens_remaining(), self.writes_left(s))
+                    min(min(s.req.tokens_remaining() - s.speculated,
+                            self.writes_left(s))
                         for s in dec))
             h = max(1, h)
             if self.ring_only:

@@ -1,0 +1,306 @@
+"""Async pipelined step: scheduler speculation (deviceless) and engine
+pipeline parity / lifecycle tests.
+
+The deviceless half drives ``Scheduler.speculate``/``reconcile``
+directly through every mid-flight hazard — finish, abort, deadline
+expiry, preemption, the capacity wall, block reservation — with no
+model and no device arrays (the same style as ``test_scheduler.py``).
+The engine half proves the pipelined loop (``enable_async_step=True``)
+is token-exact against the read-back-every-step oracle on both KV
+pools, under seeded faults with a poisoned in-flight dispatch, compiles
+nothing new in the steady state, and shuts down cleanly via
+``close()`` / the context manager.
+"""
+import numpy as np
+import pytest
+
+from repro.core.paged_cache import BlockAllocator
+from repro.serving.params import SamplingParams
+from repro.serving.scheduler import RequestState, Scheduler
+
+BS = 4
+
+
+def _sched(num_blocks=32, max_slots=3, mb=4, watermark_frac=0.0, **kw):
+    alloc = BlockAllocator(num_blocks, BS, watermark_frac=watermark_frac)
+    return Scheduler(alloc, max_slots=max_slots, max_blocks_per_seq=mb, **kw)
+
+
+def _req(rid, n_prompt, max_tokens=8, **sp_kw):
+    r = RequestState(rid=rid, prompt=list(range(1, n_prompt + 1)),
+                     sampling=SamplingParams(max_tokens=max_tokens, **sp_kw))
+    r.arrival = float(rid + 1)
+    r.prompt_len0 = n_prompt
+    return r
+
+
+def _admit_one(s, rid=0, n_prompt=6, **kw):
+    s.add(_req(rid, n_prompt, **kw))
+    [q] = s.try_admit()
+    q.seq_len += 1                 # first sampled token absorbed
+    q.req.output.append(7)
+    return q
+
+
+# --------------------------------------------------------- speculation
+def test_speculate_reconcile_roundtrip():
+    s = _sched()
+    q = _admit_one(s)
+    len0, spec0 = q.seq_len, q.speculated
+    s.speculate(q)
+    assert q.seq_len == len0 + 1 and q.speculated == spec0 + 1
+    s.reconcile(q)
+    assert q.seq_len == len0 and q.speculated == spec0
+
+
+def test_decodable_excludes_exhausted_speculated_slot():
+    s = _sched()
+    q = _admit_one(s, max_tokens=2)          # 1 left after first token
+    assert 0 in s.decodable()
+    s.speculate(q)                           # the last token is in flight
+    assert 0 not in s.decodable()            # planning it would overrun
+    assert s.plan_horizon(8) == 0
+    s.reconcile(q)
+    # non-speculating callers see the historical behavior unchanged
+    assert 0 in s.decodable()
+
+
+def test_finish_at_capacity_defers_speculated_slot():
+    s = _sched(mb=2)                         # cap = 8 tokens
+    q = _admit_one(s, n_prompt=8, max_tokens=8)   # seq_len 9: wall hit
+    s.speculate(q)                           # ...but its token is in flight
+    assert s.finish_at_capacity() == []      # deferred: token kept
+    assert 0 not in s.decodable()            # and not planned either
+    s.reconcile(q)                           # readback: engine absorbs
+    q.seq_len += 1
+    q.req.output.append(9)
+    [fin] = s.finish_at_capacity()           # one step later, same output
+    assert fin.finish_reason == "capacity" and fin.rid == 0
+
+
+def test_abort_during_flight_discards_speculated():
+    s = _sched()
+    q = _admit_one(s)
+    s.speculate(q)
+    assert s.abort(0, "aborted") is q.req
+    # the engine's collect identity check: the Sequence left `running`,
+    # so the in-flight token is discarded, and everything it held is
+    # already free again
+    assert s.running.get(q.slot) is not q
+    assert s.alloc.audit()["live_blocks"] == 0
+
+
+def test_deadline_expiry_mid_flight_discards_speculated():
+    s = _sched()
+    q = _admit_one(s, deadline_ms=0.001)     # arrival far past: expired
+    s.speculate(q)
+    [fin] = s.expire_deadlines()
+    assert fin.finish_reason == "deadline"
+    assert s.running.get(q.slot) is not q    # collect discards the token
+    assert s.alloc.audit()["live_blocks"] == 0
+
+
+def test_preemption_of_speculated_slot_folds_absorbed_only():
+    s = _sched()
+    q = _admit_one(s)                        # output [7], speculated next
+    s.speculate(q)
+    s.preempt_youngest()
+    # recompute replay folds prompt + ABSORBED output; the in-flight
+    # token is not part of the fold — re-decoding from counts ==
+    # len(output) regenerates it token-exactly
+    assert s.waiting and s.waiting[0] is q.req
+    assert q.req.prompt == list(range(1, 7)) + [7]
+    assert s.running.get(q.slot) is not q
+    assert s.alloc.audit()["live_blocks"] == 0
+
+
+def test_speculated_growth_never_exceeds_watermark_headroom():
+    # pool: 8 blocks, watermark 2.  One running sequence whose NEXT
+    # (speculated) write needs a fresh block, plus a waiting prompt.
+    s = _sched(num_blocks=8, max_slots=2, mb=4, watermark_frac=0.25)
+    q = _admit_one(s, n_prompt=8, max_tokens=16)    # 2 full blocks + 1 spare
+    s.speculate(q)                            # in-flight token: seq_len 10
+    free0 = s.alloc.num_free
+    s.add(_req(1, 12))
+    plan = s.plan_step(max_num_batched_tokens=16, max_horizon=1)
+    # the speculated slot's growth is reserved FIRST (decode priority),
+    # then admission fills what watermarked headroom remains — exactly
+    # the accounting the synchronous post-absorb plan would do
+    grown = free0 - s.alloc.num_free
+    assert s.alloc.num_free >= 0
+    admitted_tokens = sum(c.length for c in plan.prefill)
+    assert admitted_tokens <= max(0, (free0 - s.alloc.watermark)) * BS
+    assert s.alloc.audit()["free_blocks"] == s.alloc.num_free
+    assert grown >= 0 and plan.used <= plan.budget
+
+
+# --------------------------------------------------------- engine-level
+@pytest.fixture(scope="module")
+def tiny():
+    import jax
+    from repro.configs.registry import get_reduced
+    from repro.models import transformer as T
+    cfg = get_reduced("qwen1.5-0.5b", num_layers=2, num_heads=4,
+                      num_kv_heads=2)
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _engine(tiny, **kw):
+    from repro.serving.engine import ServingEngine
+    cfg, params = tiny
+    return ServingEngine(cfg, params, max_slots=4, num_blocks=128,
+                         max_blocks_per_seq=16, prefill_bucket=32,
+                         max_num_batched_tokens=64, **kw)
+
+
+def _drain(eng, prompts, sps):
+    rids = [eng.add(p, sp) for p, sp in zip(prompts, sps)]
+    finals = {}
+    for out in eng.stream():
+        if out.finished:
+            finals[out.request_id] = out
+    return {r: (tuple(finals[r].token_ids), finals[r].finish_reason)
+            for r in rids}
+
+
+def _prompts(seed, n=6):
+    rng = np.random.default_rng(seed)
+    return [list(rng.integers(1, 200, int(k)))
+            for k in rng.integers(4, 90, n)]
+
+
+@pytest.mark.parametrize("kv", ["bf16", "int8"])
+def test_async_token_exact_vs_sync_oracle(tiny, kv, recompile_sentinel):
+    prompts = _prompts(0)
+    sps = [SamplingParams(max_tokens=10)] * 3 \
+        + [SamplingParams(max_tokens=10, temperature=0.8, top_k=20,
+                          seed=i) for i in range(3)]
+    with _engine(tiny, kv_cache_dtype=kv, enable_async_step=True) as a:
+        # warm one pipelined step, then arm: the steady state must not
+        # compile anything new in either unified executable
+        it = iter(prompts)
+        got = _drain(a, prompts, sps)
+        rep = a.report()
+        del it
+        recompile_sentinel.arm(a.runner, "async")
+        got2 = _drain(a, _prompts(7), sps)
+        assert a.alloc.audit()["live_blocks"] == 0
+    with _engine(tiny, kv_cache_dtype=kv, enable_async_step=False) as s:
+        want = _drain(s, prompts, sps)
+        want2 = _drain(s, _prompts(7), sps)
+    assert got == want and got2 == want2
+    assert rep["async_steps"] > 0           # the pipeline actually engaged
+
+
+def test_async_parity_under_poisoned_in_flight_dispatch(tiny):
+    from repro.serving.faults import FaultInjector, FaultSpec
+    prompts = _prompts(2, n=8)
+    sps = [SamplingParams(max_tokens=10)] * 8
+
+    def specs():
+        # steps chosen so every victim is still live when its spec arms
+        # (rids 0-3 drain by ~step 4 on this workload, 4-7 by ~step 9)
+        return [FaultSpec("dispatch", step=1, rid=2),    # poisoned early
+                FaultSpec("dispatch", step=5, rid=5),    # poisoned mid-pipe
+                FaultSpec("dispatch", step=7, count=1),  # transient
+                FaultSpec("nan", step=2, rid=1),         # in-flight NaN row
+                FaultSpec("nan", step=5, rid=4),
+                FaultSpec("alloc", step=6, count=2)]
+
+    results = {}
+    for mode in (True, False):
+        eng = _engine(tiny, enable_async_step=mode,
+                      fault_injector=FaultInjector(specs()))
+        results[mode] = _drain(eng, prompts, sps)
+        assert eng.alloc.audit()["live_blocks"] == 0
+        eng.close()
+    assert results[True] == results[False]
+    reasons = {r for _, r in results[True].values()}
+    assert "error" in reasons               # the poison really fired
+
+
+def test_async_abort_mid_flight_token_exact(tiny):
+    # abort rid 1 while its next token is provably IN FLIGHT
+    # (speculated): the speculated token is discarded, the final event
+    # carries exactly the absorbed prefix, and nothing leaks
+    # n=8 keeps prefill chunks interleaving with decode long enough for
+    # rid 1 to be caught decoding in a pipelined (speculating) step
+    prompts = _prompts(2, n=8)
+    sp = SamplingParams(max_tokens=12)
+    with _engine(tiny, enable_async_step=False) as s:
+        want = _drain(s, prompts, [sp] * 8)
+
+    eng = _engine(tiny, enable_async_step=True)
+    rids = [eng.add(p, sp) for p in prompts]
+    outs, aborted_len = [], None
+    while eng._work_pending():
+        outs.extend(eng.step())
+        if aborted_len is None:
+            seq = next((q for q in eng.scheduler.running.values()
+                        if q.req.rid == rids[1]), None)
+            if seq is not None and seq.speculated \
+                    and len(seq.req.output) >= 1:
+                aborted_len = len(seq.req.output)   # in-flight tok NOT here
+                assert eng.abort(rids[1])
+    finals = {o.request_id: o for o in outs if o.finished}
+    assert aborted_len is not None, "never caught rid 1 mid-flight"
+    assert finals[rids[1]].finish_reason == "aborted"
+    # token-exact prefix: the speculated token was discarded, every
+    # absorbed token matches the unaborted oracle run token-for-token
+    assert tuple(finals[rids[1]].token_ids) == \
+        want[rids[1]][0][:aborted_len]
+    for r in rids:
+        if r != rids[1]:
+            assert (tuple(finals[r].token_ids),
+                    finals[r].finish_reason) == want[r]
+    assert eng.alloc.audit()["live_blocks"] == 0
+    eng.close()
+
+
+def test_close_is_idempotent_and_flushes(tiny):
+    eng = _engine(tiny, enable_async_step=True)
+    for p in _prompts(4, n=3):
+        eng.add(p, SamplingParams(max_tokens=4))
+    eng.step()
+    eng.step()                               # leave work in flight
+    outs = eng.close()
+    assert eng._flight is None and eng._detok is None
+    assert all(hasattr(o, "request_id") for o in outs)
+    assert eng.close() == []                 # idempotent
+    assert eng.alloc.audit()["free_blocks"] >= 0
+
+
+# --------------------------------------------------------- detok worker
+def test_detok_worker_fifo_and_collect_discipline():
+    from repro.obs.trace import NULL_TRACER
+    from repro.serving.detok import DetokWorker
+
+    w = DetokWorker(lambda toks: "".join(chr(97 + t % 26) for t in toks),
+                    NULL_TRACER)
+    reqs = [RequestState(rid=i, prompt=[1]) for i in range(3)]
+    for i, r in enumerate(reqs):
+        r.output = [i, i + 1]
+        w.submit(r, [i, i + 1], False, None)
+    assert w.pending() == 3
+    first = w.collect_upto(2)
+    assert [o.request_id for o in first] == [0, 1]     # FIFO, exactly 2
+    rest = w.collect_all()
+    assert [o.request_id for o in rest] == [2]
+    assert w.pending() == 0 and w.collect_upto(5) == []
+    assert reqs[0].text == first[0].text != ""
+    w.close()
+
+
+def test_detok_worker_exception_propagates():
+    from repro.obs.trace import NULL_TRACER
+    from repro.serving.detok import DetokWorker
+
+    def boom(_toks):
+        raise ValueError("bad detokenizer")
+
+    w = DetokWorker(boom, NULL_TRACER)
+    r = RequestState(rid=0, prompt=[1])
+    r.output = [5]
+    w.submit(r, [5], False, None)
+    with pytest.raises(ValueError, match="bad detokenizer"):
+        w.collect_upto(1)
